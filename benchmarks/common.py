@@ -1,0 +1,171 @@
+"""Shared benchmark setup: perf models, clusters, and the system simulator.
+
+Benchmarks evaluate three *systems* on the same workload, mirroring §5:
+
+  * ``baseline``    — data-agnostic uniform 3D parallelism (best feasible
+                      (tp, pp) grid point, Megatron/PyTorch-style) + random
+                      microbatch assignment.
+  * ``dflop``       — Data-aware 3D Parallelism Optimizer plan + Online
+                      Microbatch Scheduler (hybrid ILP/LPT).
+  * ablations      — ``opt-only`` (DFLOP plan + random microbatches) and
+                      ``sched-only`` (baseline plan + balanced microbatches),
+                      reproducing Fig. 10.
+
+End-to-end iteration time comes from the discrete-event 1F1B simulator fed
+with per-bucket stage durations predicted by the Profiling Engine's models —
+the same machinery the DFLOP components themselves use, evaluated on
+*different* random global batches than the ones the optimizer saw.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.engine import DFLOPEngine
+from repro.core.optimizer.space import ClusterSpec, ModuleParallelism, ParallelismPlan
+from repro.core.pipeline.simulator import simulate_1f1b
+from repro.core.profiling.analytic import AnalyticBackend, V5E
+from repro.core.scheduler.online import OnlineMicrobatchScheduler
+from repro.data.synthetic import MixedDataset
+
+BWD_OVER_FWD = 2.0
+
+
+def engine_for(arch_id: str, cluster: ClusterSpec, mixture: str = "mixed",
+               seed: int = 0, n_samples: int = 1024) -> DFLOPEngine:
+    spec = get_config(arch_id)
+    ds = MixedDataset(mixture, seed=seed,
+                      tokens_per_media_item=spec.tokens_per_media_item or 196)
+    eng = DFLOPEngine(
+        llm_cfg=spec.llm_cfg,
+        enc_cfg=spec.desc.encoder if spec.is_mllm else None,
+        e_seq_len=spec.desc.stub.n_tokens if spec.is_mllm else 0,
+        cluster=cluster,
+        tokens_per_media_item=spec.tokens_per_media_item or 196,
+        backend=AnalyticBackend(V5E),
+    )
+    eng.profile(ds, n_samples=n_samples)
+    eng.dataset = ds
+    return eng
+
+
+def best_uniform_baseline(eng: DFLOPEngine, gbs: int):
+    """Grid-tuned uniform plan ('manually tuned following best practices')."""
+    best, best_T = None, float("inf")
+    for tp in (1, 2, 4, 8, 16):
+        for pp in (1, 2, 4, 8):
+            res = eng.baseline_plan(gbs, tp=tp, pp=pp)
+            if res.found and res.makespan < best_T:
+                best, best_T = res, res.makespan
+    return best
+
+
+@dataclass
+class IterStats:
+    step_time: float
+    idle_time: float            # summed over stages & dp ranks
+    busy_time: float
+    stage_busy: np.ndarray      # (p,) mean across ranks
+    stage_flops: np.ndarray
+    tokens: int
+
+
+def _stage_rows(plan: ParallelismPlan, e_bucket: float, l_bucket: float):
+    """Per-stage fwd durations for one microbatch's buckets."""
+    rows = []
+    if plan.encoder is not None:
+        rows += [e_bucket / plan.encoder.pp] * plan.encoder.pp
+    rows += [l_bucket / plan.llm.pp] * plan.llm.pp
+    return rows
+
+
+def simulate_iteration(plan: ParallelismPlan,
+                       sched: OnlineMicrobatchScheduler,
+                       items, *, random_assign: bool, seed: int = 0,
+                       mode: str = "train") -> IterStats:
+    out = (sched.schedule_random(items, seed=seed) if random_assign
+           else sched.schedule(items))
+    n_mb, dp = plan.n_mb, plan.llm.dp
+    e_dur, l_dur = out.e_dur, out.l_dur
+    e_pp = plan.encoder.pp if plan.encoder else 0
+    p = e_pp + plan.llm.pp
+    step_time = 0.0
+    idle = busy = 0.0
+    stage_busy_acc = np.zeros(p)
+    for r in range(dp):
+        fwd = np.zeros((p, n_mb))
+        for i in range(n_mb):
+            g = out.groups[i * dp + r]
+            e_b = float(e_dur[g].sum()) if len(g) else 0.0
+            l_b = float(l_dur[g].sum()) if len(g) else 0.0
+            fwd[:, i] = _stage_rows(plan, e_b, l_b)
+        tr = simulate_1f1b(fwd, BWD_OVER_FWD * fwd) if mode == "train" \
+            else simulate_1f1b(fwd, 0.0 * fwd)
+        step_time = max(step_time, tr.makespan)
+        idle += tr.total_idle
+        busy += float(tr.stage_busy.sum())
+        stage_busy_acc += tr.stage_busy
+    tokens = sum(it.llm_seq_len(sched.tpm) for it in items)
+    # stage FLOPs (fwd+bwd) for Fig. 14 stage-throughput
+    perf = sched.perf
+    e_fl = sum(perf.encoder.flops(it.encoder_batch(), perf.encoder.fixed_seq,
+                                  "train").total
+               for it in items) if perf.encoder and plan.encoder else 0.0
+    l_fl = sum(perf.llm.flops(1, it.llm_seq_len(sched.tpm), "train").total
+               for it in items)
+    # per-CHIP stage FLOPs (Fig. 14 compares chip utilization across stages)
+    stage_fl = []
+    if plan.encoder:
+        chips = max(plan.encoder.chips / e_pp, 1)
+        stage_fl += [e_fl / e_pp / chips] * e_pp
+    chips = max(plan.llm.chips / plan.llm.pp, 1)
+    stage_fl += [l_fl / plan.llm.pp / chips] * plan.llm.pp
+    return IterStats(step_time, idle, busy, stage_busy_acc / dp,
+                     np.asarray(stage_fl), tokens)
+
+
+def run_system(eng: DFLOPEngine, system: str, gbs: int, *, n_iters: int = 8,
+               seed: int = 1) -> Dict:
+    """system in {baseline, dflop, opt-only, sched-only}."""
+    if system in ("baseline", "sched-only"):
+        res = best_uniform_baseline(eng, gbs)
+    else:
+        res = eng.plan_result or eng.plan(gbs)
+    plan = res.plan
+    sched = eng.scheduler(plan=plan, adaptive=False, ilp_time_limit_s=0.1)
+    random_assign = system in ("baseline", "opt-only")
+    rng = np.random.default_rng(seed)
+    stats: List[IterStats] = []
+    for i in range(n_iters):
+        items = eng.dataset.sample(gbs)
+        stats.append(simulate_iteration(plan, sched, items,
+                                        random_assign=random_assign,
+                                        seed=int(rng.integers(1 << 31))))
+    tokens = sum(s.tokens for s in stats)
+    total_time = sum(s.step_time for s in stats)
+    p = len(stats[0].stage_busy)
+    return {
+        "system": system,
+        "plan": plan.as_tuple(),
+        "throughput_tokens_per_s": tokens / total_time,
+        "step_time_s": total_time / n_iters,
+        "idle_time_s": sum(s.idle_time for s in stats) / n_iters,
+        "busy_time_s": sum(s.busy_time for s in stats) / n_iters,
+        "idle_fraction": (sum(s.idle_time for s in stats)
+                          / max(sum(s.idle_time + s.busy_time for s in stats),
+                                1e-12)),
+        "stage_throughputs": [
+            list(s.stage_flops / np.maximum(s.stage_busy, 1e-12))
+            for s in stats],
+        "n_stages": p,
+    }
+
+
+DEFAULT_CLUSTER = ClusterSpec(n_chips=32, chips_per_node=8, mem_bytes=80e9,
+                              name="4-node 8xA100-like")
+POD_CLUSTER = ClusterSpec(n_chips=256, chips_per_node=16, mem_bytes=16e9,
+                          name="v5e pod")

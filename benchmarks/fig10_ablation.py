@@ -1,0 +1,30 @@
+"""Fig. 10: ablation — incrementally adding DFLOP components to the baseline
+(optimizer-only, scheduler-only, full)."""
+from __future__ import annotations
+
+from benchmarks.common import POD_CLUSTER, engine_for, run_system
+
+ARCHS = ["llava-ov-llama8b", "llava-ov-qwen7b", "internvl2-2b"]
+
+
+def run(gbs: int = 128, n_iters: int = 6):
+    rows = []
+    for arch in ARCHS:
+        eng = engine_for(arch, POD_CLUSTER)
+        eng.plan(gbs)
+        base = run_system(eng, "baseline", gbs, n_iters=n_iters)
+        for system in ("sched-only", "opt-only", "dflop"):
+            r = run_system(eng, system, gbs, n_iters=n_iters)
+            rows.append({
+                "figure": "fig10",
+                "arch": arch,
+                "system": system,
+                "gain_vs_baseline": (r["throughput_tokens_per_s"]
+                                     / base["throughput_tokens_per_s"]),
+            })
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

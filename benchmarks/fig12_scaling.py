@@ -1,0 +1,33 @@
+"""Fig. 12: cluster scalability — the DFLOP/baseline gap widens with node
+count (straggler mitigation + richer search space)."""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import engine_for, run_system
+from repro.core.optimizer.space import ClusterSpec
+
+
+def run(arch: str = "llava-ov-llama8b", n_iters: int = 4):
+    rows = []
+    for n_chips in (32, 64, 128, 256):
+        cluster = ClusterSpec(n_chips=n_chips, chips_per_node=16,
+                              mem_bytes=16e9)
+        gbs = max(64, n_chips)
+        eng = engine_for(arch, cluster)
+        eng.plan(gbs)
+        base = run_system(eng, "baseline", gbs, n_iters=n_iters)
+        dflop = run_system(eng, "dflop", gbs, n_iters=n_iters)
+        rows.append({
+            "figure": "fig12", "arch": arch, "n_chips": n_chips, "gbs": gbs,
+            "baseline_tok_s": base["throughput_tokens_per_s"],
+            "dflop_tok_s": dflop["throughput_tokens_per_s"],
+            "gain": dflop["throughput_tokens_per_s"]
+            / base["throughput_tokens_per_s"],
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,31 @@
+"""Fig. 13: GPU idle time from pipeline bubbles (paper: DFLOP cuts measured
+idle time by 82–84% vs PyTorch/Megatron on the mixed dataset)."""
+from __future__ import annotations
+
+from benchmarks.common import POD_CLUSTER, engine_for, run_system
+from repro.core.pipeline.simulator import ideal_bubble_fraction
+
+
+def run(arch: str = "llava-ov-llama8b", gbs: int = 128, n_iters: int = 8):
+    eng = engine_for(arch, POD_CLUSTER)
+    eng.plan(gbs)
+    base = run_system(eng, "baseline", gbs, n_iters=n_iters)
+    dflop = run_system(eng, "dflop", gbs, n_iters=n_iters)
+    e, l = dflop["plan"][1], dflop["plan"][4]
+    p_df = (e or 0) + l
+    rows = [{
+        "figure": "fig13",
+        "arch": arch,
+        "baseline_idle_s": base["idle_time_s"],
+        "dflop_idle_s": dflop["idle_time_s"],
+        "idle_reduction": 1.0 - dflop["idle_time_s"] / max(base["idle_time_s"], 1e-12),
+        "baseline_idle_fraction": base["idle_fraction"],
+        "dflop_idle_fraction": dflop["idle_fraction"],
+        "dflop_ideal_bubble": ideal_bubble_fraction(p_df, dflop["plan"][6]),
+    }]
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,50 @@
+"""Fig. 2: throughput variation with input shape × TP degree.
+
+Paper's motivation figure: encoder throughput degrades with TP at small
+effective batch; LLM throughput varies with sequence length × TP.  Here the
+curves come from the calibrated v5e analytic backend (the same model the
+Profiling Engine interpolates).
+"""
+from __future__ import annotations
+
+from repro.configs import get_config
+from repro.core.profiling.analytic import AnalyticBackend, V5E
+
+
+def run():
+    backend = AnalyticBackend(V5E)
+    spec = get_config("llava-ov-qwen7b")
+    enc, llm = spec.desc.encoder, spec.desc.llm
+    rows = []
+    base_e = {b: backend.throughput(enc, b, spec.desc.stub.n_tokens, 1,
+                                    mode="train") for b in (1, 2, 4, 8, 16, 32)}
+    base_l = {s: backend.throughput(llm, 1, s, 1, mode="train")
+              for s in (512, 2048, 8192, 32768)}
+    for tp in (1, 2, 4, 8, 16):
+        for b in (1, 2, 4, 8, 16, 32):
+            thr = backend.throughput(enc, b, spec.desc.stub.n_tokens, tp,
+                                     mode="train")
+            rows.append({"figure": "fig2a", "module": "encoder(siglip)",
+                         "eff_batch": b, "tp": tp,
+                         "per_chip_flops_per_s": thr / tp,
+                         "tp_efficiency": thr / tp / base_e[b]})
+        for s in (512, 2048, 8192, 32768):
+            thr = backend.throughput(llm, 1, s, tp, mode="train")
+            rows.append({"figure": "fig2b", "module": "llm(qwen2.5-7b)",
+                         "seq_len": s, "tp": tp,
+                         "per_chip_flops_per_s": thr / tp,
+                         "tp_efficiency": thr / tp / base_l[s]})
+    return rows
+
+
+def degradation_summary(rows):
+    """Per-chip TP=16 vs TP=1 efficiency at the smallest shape (the paper's
+    headline effect: small fragments under-utilize at high TP)."""
+    enc = {(r["eff_batch"], r["tp"]): r["tp_efficiency"]
+           for r in rows if r["figure"] == "fig2a"}
+    return enc[(1, 16)]
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

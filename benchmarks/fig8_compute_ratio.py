@@ -1,0 +1,44 @@
+"""Fig. 8: DFLOP's gain vs the encoder/LLM computational-load ratio.
+
+Paper: "the performance advantage of DFLOP amplifies as the computational
+loads between the two modules become more balanced."  We sweep the ratio by
+varying the connector token budget (more media tokens -> heavier encoder).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from benchmarks.common import POD_CLUSTER, engine_for, run_system
+from repro.configs import get_config
+from repro.core.profiling.flops import module_flops
+
+
+def run(gbs: int = 128, n_iters: int = 4):
+    rows = []
+    for arch in ("llava-ov-qwen7b", "llava-ov-llama8b", "internvl2-2b",
+                 "qwen2-audio-7b"):
+        spec = get_config(arch)
+        eng = engine_for(arch, POD_CLUSTER)
+        eng.plan(gbs)
+        base = run_system(eng, "baseline", gbs, n_iters=n_iters)
+        dflop = run_system(eng, "dflop", gbs, n_iters=n_iters)
+        # FLOP ratio at the dataset mean shapes
+        mean_b, mean_s = eng.dist.mean()
+        e_fl = module_flops(spec.desc.encoder, mean_b,
+                            spec.desc.stub.n_tokens, mode="train").total
+        l_fl = module_flops(spec.desc.llm, 1, mean_s, mode="train").total
+        rows.append({
+            "figure": "fig8", "arch": arch,
+            "enc_llm_flop_ratio": e_fl / l_fl,
+            "gain": dflop["throughput_tokens_per_s"]
+            / base["throughput_tokens_per_s"],
+        })
+    rows.sort(key=lambda r: r["enc_llm_flop_ratio"])
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

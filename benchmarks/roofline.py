@@ -1,0 +1,87 @@
+"""§Roofline: three-term roofline analysis from the dry-run artifacts.
+
+    compute term    = HLO_FLOPs(per chip) / peak_FLOP/s
+    memory term     = HLO_bytes(per chip) / HBM_bw
+    collective term = collective_bytes(per chip) / link_bw
+
+HLO statistics come from ``repro.launch.hlo_stats`` (post-SPMD, per-device,
+while-trip-count corrected).  Hardware constants: TPU v5e — 197 TFLOP/s
+bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+
+def load_records(dryrun_dir: str = DRYRUN_DIR):
+    recs = []
+    for fn in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(fn) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def roofline_row(rec: dict) -> dict:
+    hlo = rec["hlo"]
+    n = rec["n_chips"]
+    t_compute = hlo["flops"] / PEAK_FLOPS          # per-chip flops already
+    t_memory = hlo["hbm_bytes"] / HBM_BW
+    t_coll = hlo["total_collective_bytes"] / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    model_fl_chip = rec["model_flops"] / n
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "kind": rec["kind"],
+        "compute_s": t_compute, "memory_s": t_memory, "collective_s": t_coll,
+        "bound": dominant,
+        "step_lower_bound_s": max(terms.values()),
+        "model_flops_per_chip": model_fl_chip,
+        "useful_flop_ratio": model_fl_chip / max(hlo["flops"], 1.0),
+        "peak_mem_gb": rec["memory"]["peak_per_chip"] / 1e9,
+        "fits_16gb": rec.get("fits_16gb"),
+        "compile_s": rec.get("compile_s"),
+        "mfu_bound": model_fl_chip / PEAK_FLOPS / max(terms.values()) if
+        max(terms.values()) > 0 else 0.0,
+    }
+
+
+def run(mesh: str = "16x16"):
+    rows = []
+    for rec in load_records():
+        if not rec.get("ok") or rec.get("skipped"):
+            if rec.get("skipped"):
+                rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                             "mesh": rec["mesh"], "bound": "skipped",
+                             "reason": rec.get("reason", "")})
+            continue
+        if mesh and rec["mesh"] != mesh:
+            continue
+        rows.append(roofline_row(rec))
+    return rows
+
+
+def summary_table(rows):
+    lines = ["arch,shape,mesh,bound,compute_s,memory_s,collective_s,"
+             "useful_flop_ratio,mfu_bound,peak_gb,fits"]
+    for r in rows:
+        if r["bound"] == "skipped":
+            continue
+        lines.append(
+            f"{r['arch']},{r['shape']},{r['mesh']},{r['bound']},"
+            f"{r['compute_s']:.4g},{r['memory_s']:.4g},"
+            f"{r['collective_s']:.4g},{r['useful_flop_ratio']:.3f},"
+            f"{r['mfu_bound']:.3f},{r['peak_mem_gb']:.2f},{r['fits_16gb']}")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(summary_table(run(mesh="")))

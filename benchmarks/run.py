@@ -1,0 +1,84 @@
+"""Benchmark driver: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows per artifact and writes the
+full JSON to benchmarks/results/benchmarks.json.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig7,fig13]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+
+def _fmt(v):
+    if isinstance(v, float):
+        return f"{v:.6g}"
+    return str(v)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+
+    from benchmarks import (  # noqa: E402  (heavy imports after argparse)
+        fig2_throughput_vs_shape,
+        fig4_stage_durations,
+        fig7_end_to_end,
+        fig8_compute_ratio,
+        fig9_audio,
+        fig10_ablation,
+        fig11_datasets,
+        fig12_scaling,
+        fig13_bubbles,
+        fig14_stage_throughput,
+        fig15_adaptive,
+        roofline,
+        tab4_overhead,
+    )
+
+    modules = {
+        "fig2": fig2_throughput_vs_shape,
+        "fig4": fig4_stage_durations,
+        "fig7": fig7_end_to_end,
+        "fig8": fig8_compute_ratio,
+        "fig9": fig9_audio,
+        "fig10": fig10_ablation,
+        "fig11": fig11_datasets,
+        "fig12": fig12_scaling,
+        "fig13": fig13_bubbles,
+        "fig14": fig14_stage_throughput,
+        "fig15": fig15_adaptive,
+        "tab4": tab4_overhead,
+        "roofline": roofline,
+    }
+    only = set(args.only.split(",")) if args.only else None
+
+    all_rows = {}
+    print("name,us_per_call,derived")
+    for name, mod in modules.items():
+        if only and name not in only:
+            continue
+        t0 = time.monotonic()
+        try:
+            rows = mod.run()
+        except Exception as e:  # noqa: BLE001
+            print(f"{name},ERROR,{type(e).__name__}: {e}")
+            continue
+        dt_us = (time.monotonic() - t0) * 1e6
+        all_rows[name] = rows
+        for r in rows:
+            derived = ";".join(f"{k}={_fmt(v)}" for k, v in r.items()
+                               if k not in ("figure",))
+            print(f"{name},{dt_us / max(len(rows), 1):.0f},{derived}")
+    out = os.path.join(os.path.dirname(__file__), "results")
+    os.makedirs(out, exist_ok=True)
+    with open(os.path.join(out, "benchmarks.json"), "w") as f:
+        json.dump(all_rows, f, indent=1, default=str)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Table 4 / Fig. 16: DFLOP component overhead.
+
+Fig. 16a: optimizer latency vs GPUs × GBS (paper: <200 ms at 1024 GPUs).
+Fig. 16b: scheduler latency vs GBS (ILP -> LPT fallback at 2048; <1% gap).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import engine_for
+from repro.core.optimizer.space import ClusterSpec
+
+
+def run():
+    rows = []
+    # --- Fig 16a: optimizer latency ----------------------------------- #
+    for n_chips in (64, 256, 512, 1024):
+        cluster = ClusterSpec(n_chips=n_chips, chips_per_node=16,
+                              mem_bytes=16e9)
+        eng = engine_for("llava-ov-llama8b", cluster)
+        for gbs in (256, 1024):
+            res = eng.plan(gbs)
+            rows.append({
+                "figure": "fig16a", "n_chips": n_chips, "gbs": gbs,
+                "optimizer_ms": res.elapsed_s * 1e3,
+                "n_configs": res.n_configs,
+            })
+    # --- Fig 16b: scheduler latency + imbalance vs GBS ----------------- #
+    eng = engine_for("llava-ov-llama8b",
+                     ClusterSpec(n_chips=256, chips_per_node=16))
+    eng.plan(256)
+    sched = eng.scheduler(adaptive=False, ilp_time_limit_s=0.5)
+    for gbs in (128, 512, 2048):
+        items = eng.dataset.sample(gbs)
+        out = sched.schedule(items)
+        rows.append({
+            "figure": "fig16b", "gbs": gbs,
+            "scheduler_ms": out.elapsed_s * 1e3,
+            "solver": out.solver,
+            "imbalance_vs_lb": out.imbalance,
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,68 @@
+"""Quickstart: DFLOP end-to-end on a tiny MLLM (CPU, ~1 minute).
+
+Profiles a synthetic mixed multimodal dataset, plans the parallelism with
+the Data-aware Optimizer, then trains a tiny decoder with the Online
+Microbatch Scheduler feeding balanced, sequence-packed microbatches.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.types import ModelConfig
+from repro.core.engine import DFLOPEngine
+from repro.core.optimizer.space import ClusterSpec, ModuleParallelism, ParallelismPlan
+from repro.data.loader import ScheduledLoader
+from repro.data.synthetic import MixedDataset
+from repro.models import model as model_lib
+from repro.models.model import FwdCtx
+from repro.train.optim import AdamWConfig, adamw_init
+from repro.train.step import make_train_step
+
+
+def main():
+    cfg = ModelConfig(name="tiny", family="dense", n_layers=4, d_model=128,
+                      n_heads=4, n_kv_heads=2, d_ff=512, vocab_size=512,
+                      dtype="float32")
+    ds = MixedDataset("mixed", seed=0, tokens_per_media_item=8)
+
+    # 1) Profiling Engine + Data-aware Optimizer (analytic backend)
+    cluster = ClusterSpec(n_chips=64, chips_per_node=16)
+    eng = DFLOPEngine(llm_cfg=cfg, cluster=cluster, tokens_per_media_item=8)
+    eng.profile(ds)
+    res = eng.plan(gbs=64)
+    print(f"[plan] theta*={res.plan.as_tuple()}  expected makespan="
+          f"{res.makespan:.4f}s  ({res.n_configs} configs, "
+          f"{res.elapsed_s*1e3:.0f} ms)")
+
+    # 2) Online Microbatch Scheduler feeding a real training loop (the local
+    #    run uses a single-host plan: dp=1, N_mb microbatches)
+    local_plan = ParallelismPlan(llm=ModuleParallelism(1, 1, 1), n_mb=4)
+    sched = eng.scheduler(plan=local_plan, adaptive=True,
+                          ilp_time_limit_s=0.05)
+    loader = ScheduledLoader(ds, sched, gbs=16, token_budget=512,
+                             vocab_size=cfg.vocab_size)
+
+    params = model_lib.init(jax.random.PRNGKey(0), cfg)
+    opt = adamw_init(params)
+    step = jax.jit(make_train_step(
+        cfg, AdamWConfig(lr=3e-3),
+        ctx=FwdCtx(mode="train", attn_impl="chunked")))
+
+    it = iter(loader)
+    t0 = time.time()
+    for k in range(20):
+        batch = {k2: jnp.asarray(v) for k2, v in next(it).items()}
+        params, opt, m = step(params, opt, batch, 3e-3)
+        if k % 5 == 0:
+            sc = loader.last_schedule
+            print(f"step {k:3d}  loss={float(m['loss']):.3f}  "
+                  f"schedule: solver={sc.solver} imbalance={sc.imbalance:.4f}")
+    print(f"[done] 20 steps in {time.time()-t0:.1f}s  "
+          f"final loss {float(m['loss']):.3f}")
+
+
+if __name__ == "__main__":
+    main()

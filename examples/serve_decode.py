@@ -1,0 +1,49 @@
+"""Serving example: batched greedy decoding with KV caches across families.
+
+Runs a tiny dense (sliding-window) model and a tiny hybrid (Mamba+attention)
+model through prefill-free incremental decoding, demonstrating the serving
+substrate the decode_32k / long_500k dry-run shapes lower.
+
+    PYTHONPATH=src python examples/serve_decode.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.types import ModelConfig
+from repro.models import model as model_lib
+from repro.serve.steps import greedy_generate
+
+CONFIGS = [
+    ModelConfig(name="tiny-swa", family="dense", n_layers=4, d_model=128,
+                n_heads=4, n_kv_heads=1, d_ff=512, vocab_size=512,
+                attention_kind="sliding", window_size=32, dtype="float32"),
+    ModelConfig(name="tiny-hybrid", family="hybrid", n_layers=4, d_model=128,
+                n_heads=4, n_kv_heads=2, d_ff=512, vocab_size=512,
+                layer_pattern=("mamba", "attention"), dtype="float32"),
+    ModelConfig(name="tiny-rwkv", family="ssm", n_layers=2, d_model=128,
+                n_heads=0, n_kv_heads=0, d_ff=512, vocab_size=512,
+                layer_pattern=("rwkv6",), rwkv_head_dim=32, dtype="float32"),
+]
+
+
+def main():
+    B, prompt_len, max_new = 4, 16, 32
+    for cfg in CONFIGS:
+        params = model_lib.init(jax.random.PRNGKey(0), cfg)
+        prompt = jax.random.randint(jax.random.PRNGKey(1), (B, prompt_len),
+                                    2, cfg.vocab_size)
+        t0 = time.time()
+        out = greedy_generate(cfg, params, prompt, max_new=max_new,
+                              max_len=prompt_len + max_new)
+        dt = time.time() - t0
+        assert out.shape == (B, prompt_len + max_new)
+        assert bool(jnp.all(out >= 0))
+        print(f"{cfg.name:12s} generated {B}x{max_new} tokens in {dt:.2f}s "
+              f"({B*max_new/dt:.0f} tok/s incl. compile) "
+              f"sample: {out[0, prompt_len:prompt_len+8].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

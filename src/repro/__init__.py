@@ -1,0 +1,23 @@
+"""repro — DFLOP: data-driven multimodal LLM training pipeline optimization, in JAX.
+
+Faithful JAX/TPU reproduction of:
+  "DFLOP: A Data-driven Framework for Multimodal LLM Training Pipeline
+   Optimization" (An et al., CS.DC 2026)
+
+Package layout:
+  repro.core      — the paper's contribution (profiling engine, data-aware
+                    3D parallelism optimizer, online microbatch scheduler,
+                    pipeline executor/simulator, inter-model communicator)
+  repro.models    — pure-functional JAX model substrate (dense / MoE / SSM /
+                    hybrid / encoder / VLM families)
+  repro.kernels   — Pallas TPU kernels (packed flash attention, RWKV6 scan,
+                    Mamba selective scan) with jnp reference oracles
+  repro.sharding  — logical-axis sharding rules -> NamedSharding
+  repro.data      — synthetic multimodal data pipeline + sequence packing
+  repro.train     — loss / AdamW / grad-accum trainer / checkpointing
+  repro.serve     — KV caches, prefill/decode steps
+  repro.configs   — assigned architecture configs (+ the paper's own MLLMs)
+  repro.launch    — production mesh, multi-pod dry-run, train driver
+"""
+
+__version__ = "0.1.0"

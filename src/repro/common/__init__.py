@@ -1,0 +1,21 @@
+from repro.common.types import (
+    AttentionKind,
+    FFNKind,
+    LayerKind,
+    ModelConfig,
+    MLLMConfig,
+    ShapeSpec,
+    INPUT_SHAPES,
+)
+from repro.common import pytree
+
+__all__ = [
+    "AttentionKind",
+    "FFNKind",
+    "LayerKind",
+    "ModelConfig",
+    "MLLMConfig",
+    "ShapeSpec",
+    "INPUT_SHAPES",
+    "pytree",
+]

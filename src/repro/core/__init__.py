@@ -1,0 +1,10 @@
+"""DFLOP core: the paper's contribution.
+
+  profiling/   — Profiling Engine (§3.2): Model Profiler + Data Profiler
+  optimizer/   — Data-aware 3D Parallelism Optimizer (§3.3, Algorithm 1)
+  scheduler/   — Online Microbatch Scheduler (§3.4): hybrid ILP/LPT +
+                 Adaptive Correction
+  pipeline/    — 1F1B simulator + shard_map pipeline executor
+  communicator — Inter-model Communicator (§4) as SPMD reshard / shard_map
+  engine       — façade wiring profile -> plan -> schedule
+"""

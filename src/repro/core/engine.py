@@ -1,0 +1,87 @@
+"""DFLOP façade: profile → plan → schedule (paper Fig. 3).
+
+    engine = DFLOPEngine(enc_cfg, llm_cfg, cluster, tokens_per_media_item)
+    engine.profile(dataset)                  # Profiling Engine (§3.2)
+    plan = engine.plan(gbs)                  # Data-aware Optimizer (§3.3)
+    sched = engine.scheduler()               # Online Scheduler (§3.4)
+    for batch_items in loader:
+        out = sched.schedule(batch_items)    # index groups -> data loader
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.common.types import ModelConfig
+from repro.core.optimizer.search import ParallelismOptimizer, SearchResult
+from repro.core.optimizer.space import ClusterSpec, ParallelismPlan
+from repro.core.profiling.analytic import AnalyticBackend, HardwareSpec, V5E
+from repro.core.profiling.data_profiler import DataProfiler, ShapeDistribution
+from repro.core.profiling.model_profiler import (
+    Backend,
+    ModelProfiler,
+    PerfModel,
+)
+from repro.core.scheduler.adaptive import AdaptiveCorrection
+from repro.core.scheduler.online import OnlineMicrobatchScheduler
+
+
+@dataclass
+class DFLOPEngine:
+    llm_cfg: ModelConfig
+    cluster: ClusterSpec
+    tokens_per_media_item: int = 196
+    enc_cfg: Optional[ModelConfig] = None
+    e_seq_len: int = 729                 # encoder tokens per media item
+    backend: Optional[Backend] = None
+    mode: str = "train"
+    objective: str = "mean"
+
+    perf: Optional[PerfModel] = None
+    dist: Optional[ShapeDistribution] = None
+    plan_result: Optional[SearchResult] = None
+
+    # ------------------------------------------------------------------ #
+    def profile(self, dataset=None, items: Optional[Sequence] = None,
+                n_samples: int = 2048) -> "DFLOPEngine":
+        """Run Model Profiler + Data Profiler (they run concurrently in the
+        paper; both are sub-minute here)."""
+        backend = self.backend or AnalyticBackend(V5E)
+        tp_max = self.cluster.chips_per_node
+        tps = [t for t in (1, 2, 4, 8, 16, 32) if t <= tp_max]
+        profiler = ModelProfiler(backend, tp_degrees=tps, mode=self.mode)
+        self.perf = profiler.profile_mllm(self.enc_cfg, self.llm_cfg,
+                                          self.e_seq_len)
+        dp = DataProfiler(self.tokens_per_media_item)
+        if items is not None:
+            self.dist = dp.profile(items)
+        elif dataset is not None:
+            self.dist = dp.profile_sampler(dataset, n_samples)
+        else:
+            self.dist = ShapeDistribution(np.ones(1), np.full(1, 1024.0))
+        return self
+
+    # ------------------------------------------------------------------ #
+    def plan(self, gbs: int, **kw) -> SearchResult:
+        assert self.perf is not None, "call profile() first"
+        opt = ParallelismOptimizer(self.cluster, self.perf, mode=self.mode,
+                                   objective=self.objective, **kw)
+        self.plan_result = opt.search(self.dist, gbs)
+        return self.plan_result
+
+    def baseline_plan(self, gbs: int, tp: int, pp: int) -> SearchResult:
+        opt = ParallelismOptimizer(self.cluster, self.perf, mode=self.mode)
+        return opt.baseline_uniform(self.dist, gbs, tp, pp)
+
+    # ------------------------------------------------------------------ #
+    def scheduler(self, plan: Optional[ParallelismPlan] = None,
+                  adaptive: bool = True,
+                  ilp_time_limit_s: float = 0.25) -> OnlineMicrobatchScheduler:
+        plan = plan or (self.plan_result.plan if self.plan_result else None)
+        assert plan is not None, "call plan() first or pass a plan"
+        corr = AdaptiveCorrection() if adaptive else None
+        return OnlineMicrobatchScheduler(
+            plan, self.perf, self.tokens_per_media_item,
+            ilp_time_limit_s=ilp_time_limit_s, adaptive=corr, mode=self.mode)

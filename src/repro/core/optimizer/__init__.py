@@ -1,0 +1,18 @@
+from repro.core.optimizer.space import (
+    ClusterSpec,
+    ModuleParallelism,
+    ParallelismPlan,
+    find_combs,
+    enumerate_configs,
+)
+from repro.core.optimizer.search import ParallelismOptimizer, SearchResult
+
+__all__ = [
+    "ClusterSpec",
+    "ModuleParallelism",
+    "ParallelismPlan",
+    "find_combs",
+    "enumerate_configs",
+    "ParallelismOptimizer",
+    "SearchResult",
+]

@@ -1,0 +1,100 @@
+"""Search-space generation (Algorithm 1, phase 1).
+
+Enumerates GPU partitions between the modality encoder and the LLM and all
+(TP, PP, DP) factorizations per module.  TP degrees are limited to powers of
+two within one high-bandwidth domain (paper Eq. 2: TP "typically limited to
+GPUs within the same node"; on TPU the analogue is the mesh's "model" axis).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterator, List, Optional, Tuple
+
+
+@dataclass(frozen=True)
+class ClusterSpec:
+    n_chips: int
+    chips_per_node: int = 16          # TP domain size
+    mem_bytes: float = 16e9           # per-chip HBM (v5e)
+    name: str = "tpu-v5e-pod"
+
+    @property
+    def n_nodes(self) -> int:
+        return self.n_chips // self.chips_per_node
+
+
+@dataclass(frozen=True)
+class ModuleParallelism:
+    tp: int
+    pp: int
+    dp: int
+
+    @property
+    def chips(self) -> int:
+        return self.tp * self.pp * self.dp
+
+
+@dataclass(frozen=True)
+class ParallelismPlan:
+    """θ = (E_tp, E_pp, E_dp, L_tp, L_pp, L_dp, N_mb)."""
+
+    llm: ModuleParallelism
+    encoder: Optional[ModuleParallelism] = None
+    n_mb: int = 1
+
+    @property
+    def pipeline_depth(self) -> int:
+        e_pp = self.encoder.pp if self.encoder else 0
+        return e_pp + self.llm.pp
+
+    @property
+    def chips(self) -> int:
+        return self.llm.chips + (self.encoder.chips if self.encoder else 0)
+
+    def as_tuple(self):
+        e = self.encoder or ModuleParallelism(0, 0, 0)
+        return (e.tp, e.pp, e.dp, self.llm.tp, self.llm.pp, self.llm.dp,
+                self.n_mb)
+
+
+def _pow2s_up_to(n: int) -> List[int]:
+    out, v = [], 1
+    while v <= n:
+        out.append(v)
+        v *= 2
+    return out
+
+
+def find_combs(n_chips: int, max_tp: int, *, max_pp: int = 64) -> List[ModuleParallelism]:
+    """All (tp, pp, dp) with tp·pp·dp == n_chips (paper's FindCombs)."""
+    out = []
+    for tp in _pow2s_up_to(min(max_tp, n_chips)):
+        if n_chips % tp:
+            continue
+        rest = n_chips // tp
+        for pp in range(1, min(max_pp, rest) + 1):
+            if rest % pp:
+                continue
+            out.append(ModuleParallelism(tp, pp, rest // pp))
+    return out
+
+
+def enumerate_configs(cluster: ClusterSpec, *, has_encoder: bool,
+                      max_pp: int = 64,
+                      partition_step: int = 1) -> Iterator[Tuple[Optional[ModuleParallelism], ModuleParallelism]]:
+    """Phase 1: yield (encoder_parallelism | None, llm_parallelism)."""
+    N = cluster.n_chips
+    max_tp = cluster.chips_per_node
+    if not has_encoder:
+        for lp in find_combs(N, max_tp, max_pp=max_pp):
+            yield None, lp
+        return
+    for e_chips in range(1, N, partition_step):
+        l_chips = N - e_chips
+        e_combs = find_combs(e_chips, max_tp, max_pp=max_pp)
+        if not e_combs:
+            continue
+        l_combs = find_combs(l_chips, max_tp, max_pp=max_pp)
+        for ep in e_combs:
+            for lp in l_combs:
+                yield ep, lp

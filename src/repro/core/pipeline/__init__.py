@@ -1,0 +1,7 @@
+from repro.core.pipeline.simulator import (
+    PipelineTrace,
+    simulate_1f1b,
+    ideal_bubble_fraction,
+)
+
+__all__ = ["PipelineTrace", "simulate_1f1b", "ideal_bubble_fraction"]

@@ -1,0 +1,18 @@
+from repro.core.profiling.interpolation import GridInterpolator
+from repro.core.profiling.data_profiler import DataProfiler, ShapeDistribution
+from repro.core.profiling.model_profiler import (
+    ModelProfiler,
+    PerfModel,
+    ThroughputModel,
+    MemoryModel,
+)
+
+__all__ = [
+    "GridInterpolator",
+    "DataProfiler",
+    "ShapeDistribution",
+    "ModelProfiler",
+    "PerfModel",
+    "ThroughputModel",
+    "MemoryModel",
+]

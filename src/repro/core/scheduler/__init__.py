@@ -1,0 +1,13 @@
+from repro.core.scheduler.lpt import lpt_schedule
+from repro.core.scheduler.ilp import BnBResult, solve_makespan_bnb
+from repro.core.scheduler.online import OnlineMicrobatchScheduler, ScheduleOutput
+from repro.core.scheduler.adaptive import AdaptiveCorrection
+
+__all__ = [
+    "lpt_schedule",
+    "BnBResult",
+    "solve_makespan_bnb",
+    "OnlineMicrobatchScheduler",
+    "ScheduleOutput",
+    "AdaptiveCorrection",
+]

@@ -1,0 +1,132 @@
+"""Online Microbatch Scheduler (paper §3.4).
+
+Per global batch: predict per-item (E_dur, L_dur) from the profiled models
+under the active plan θ*, partition the N items into m = N_mb · L_dp buckets
+with the hybrid exact-then-LPT solver, and hand the index groups to the data
+loader.  Runs asynchronously on host CPU — batch t+1 is scheduled while step
+t computes (§3.4.2: "the scheduler operates asynchronously to eliminate
+scheduling overhead").
+"""
+from __future__ import annotations
+
+import concurrent.futures
+import time
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.optimizer.space import ParallelismPlan
+from repro.core.profiling.model_profiler import PerfModel
+from repro.core.scheduler.adaptive import AdaptiveCorrection
+from repro.core.scheduler.ilp import solve_makespan_bnb
+from repro.core.scheduler.lpt import cmax, lower_bound, lpt_schedule
+from repro.data.items import DataItem
+
+
+@dataclass
+class ScheduleOutput:
+    groups: List[List[int]]          # m index groups over the global batch
+    cmax: float                      # predicted bottleneck duration
+    lower_bound: float
+    solver: str                      # "ilp" | "lpt" | "ilp-timeout"
+    elapsed_s: float
+    e_dur: np.ndarray
+    l_dur: np.ndarray
+
+    @property
+    def imbalance(self) -> float:
+        """Relative gap to the load lower bound (<1% at GBS 2048, Fig. 16b)."""
+        return self.cmax / max(self.lower_bound, 1e-12) - 1.0
+
+
+class OnlineMicrobatchScheduler:
+    def __init__(self, plan: ParallelismPlan, perf: PerfModel,
+                 tokens_per_media_item: int, *,
+                 ilp_time_limit_s: float = 0.25,
+                 adaptive: Optional[AdaptiveCorrection] = None,
+                 mode: str = "train"):
+        self.plan = plan
+        self.perf = perf
+        self.tpm = tokens_per_media_item
+        self.ilp_time_limit_s = ilp_time_limit_s
+        self.adaptive = adaptive
+        self.mode = mode
+        self._pool = concurrent.futures.ThreadPoolExecutor(max_workers=1)
+        self._pending: Optional[concurrent.futures.Future] = None
+
+    # ------------------------------------------------------------------ #
+    @property
+    def n_buckets(self) -> int:
+        return self.plan.n_mb * self.plan.llm.dp
+
+    def item_durations(self, items: Sequence[DataItem]) -> tuple[np.ndarray, np.ndarray]:
+        """Predicted per-item stage durations under θ* (§3.4.2 step 1)."""
+        ep, lp = self.plan.encoder, self.plan.llm
+        e_dur = np.zeros(len(items))
+        l_dur = np.zeros(len(items))
+        for i, it in enumerate(items):
+            b = it.encoder_batch()
+            s = it.llm_seq_len(self.tpm)
+            if self.perf.encoder is not None and ep is not None and b > 0:
+                d = self.perf.e_dur(b, ep.tp, self.mode) / max(ep.pp, 1)
+                if self.adaptive is not None:
+                    d = self.adaptive.correct("encoder", b, d)
+                e_dur[i] = d
+            d = self.perf.l_dur(s, lp.tp, self.mode) / max(lp.pp, 1)
+            if self.adaptive is not None:
+                d = self.adaptive.correct("llm", s, d)
+            l_dur[i] = d
+        return e_dur, l_dur
+
+    # ------------------------------------------------------------------ #
+    def schedule(self, items: Sequence[DataItem]) -> ScheduleOutput:
+        t0 = time.monotonic()
+        e_dur, l_dur = self.item_durations(items)
+        m = self.n_buckets
+        res = solve_makespan_bnb(e_dur, l_dur, m,
+                                 time_limit_s=self.ilp_time_limit_s)
+        if res.timed_out:
+            # hybrid contract: on timeout the incumbent is the LPT solution
+            # possibly improved by partial search — keep the better one.
+            solver = "ilp-timeout"
+        else:
+            solver = "ilp"
+        lb = lower_bound(e_dur, l_dur, m)
+        return ScheduleOutput(res.groups, res.cmax, lb, solver,
+                              time.monotonic() - t0, e_dur, l_dur)
+
+    def schedule_random(self, items: Sequence[DataItem],
+                        seed: int = 0) -> ScheduleOutput:
+        """Data-agnostic baseline: random assignment (what PyTorch/Megatron
+        loaders do) — used in Fig. 4/13 comparisons."""
+        t0 = time.monotonic()
+        e_dur, l_dur = self.item_durations(items)
+        m = self.n_buckets
+        rng = np.random.default_rng(seed)
+        perm = rng.permutation(len(items))
+        groups: List[List[int]] = [[] for _ in range(m)]
+        for pos, i in enumerate(perm):
+            groups[pos % m].append(int(i))
+        return ScheduleOutput(groups, cmax(e_dur, l_dur, groups),
+                              lower_bound(e_dur, l_dur, m), "random",
+                              time.monotonic() - t0, e_dur, l_dur)
+
+    # ------------------------------------------------------------------ #
+    # Asynchronous operation: schedule batch t+1 while step t runs.
+    def submit(self, items: Sequence[DataItem]) -> None:
+        self._pending = self._pool.submit(self.schedule, list(items))
+
+    def collect(self) -> Optional[ScheduleOutput]:
+        if self._pending is None:
+            return None
+        out = self._pending.result()
+        self._pending = None
+        return out
+
+    # ------------------------------------------------------------------ #
+    def observe(self, module: str, shape: float, predicted: float,
+                actual: float) -> None:
+        """Runtime feedback for Adaptive Correction."""
+        if self.adaptive is not None:
+            self.adaptive.observe(module, shape, predicted, actual)

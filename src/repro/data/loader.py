@@ -1,0 +1,91 @@
+"""Scheduled data loader: DFLOP scheduler groups -> packed tensor batches.
+
+Integration point of the Online Microbatch Scheduler with the input
+pipeline (paper Fig. 3: "integrated into the data loading pipeline").  Each
+global batch of DataItems is partitioned into m = N_mb · L_dp buckets by the
+scheduler; bucket (i, r) becomes row r of microbatch i, sequence-packed to a
+fixed token budget.  Scheduling of batch t+1 overlaps step t via
+`scheduler.submit/collect`.
+"""
+from __future__ import annotations
+
+from typing import Iterator, Optional, Sequence
+
+import numpy as np
+
+from repro.core.scheduler.online import OnlineMicrobatchScheduler, ScheduleOutput
+from repro.data.items import DataItem
+from repro.data.packing import pack_items
+from repro.data.synthetic import MixedDataset
+
+
+class ScheduledLoader:
+    def __init__(self, dataset: MixedDataset,
+                 scheduler: OnlineMicrobatchScheduler, *,
+                 gbs: int, token_budget: int, vocab_size: int,
+                 random_baseline: bool = False, seed: int = 0,
+                 prefetch: bool = True):
+        self.dataset = dataset
+        self.scheduler = scheduler
+        self.gbs = gbs
+        self.budget = token_budget
+        self.vocab = vocab_size
+        self.random_baseline = random_baseline
+        self.rng = np.random.default_rng(seed)
+        self.prefetch = prefetch
+        self.last_schedule: Optional[ScheduleOutput] = None
+
+    # ------------------------------------------------------------------ #
+    def _schedule(self, items) -> ScheduleOutput:
+        if self.random_baseline:
+            return self.scheduler.schedule_random(items, seed=int(self.rng.integers(1 << 31)))
+        return self.scheduler.schedule(items)
+
+    def _build(self, items: Sequence[DataItem], out: ScheduleOutput) -> dict:
+        n_mb = self.scheduler.plan.n_mb
+        dp = self.scheduler.plan.llm.dp
+        m = n_mb * dp
+        groups = out.groups
+        assert len(groups) == m
+        tokens = np.zeros((n_mb, dp, self.budget), np.int32)
+        labels = np.full((n_mb, dp, self.budget), -1, np.int32)
+        seg = np.zeros((n_mb, dp, self.budget), np.int32)
+        pos = np.zeros((n_mb, dp, self.budget), np.int32)
+        for g_idx, g in enumerate(groups):
+            i, r = divmod(g_idx, dp)
+            packed = pack_items([items[j] for j in g], self.budget,
+                                self.scheduler.tpm, self.vocab, self.rng)
+            tokens[i, r] = packed.tokens[0]
+            labels[i, r] = packed.labels[0]
+            seg[i, r] = packed.segment_ids[0]
+            pos[i, r] = packed.positions[0]
+        return {"tokens": tokens, "labels": labels,
+                "segment_ids": seg, "positions": pos}
+
+    # ------------------------------------------------------------------ #
+    def __iter__(self) -> Iterator[dict]:
+        gen = self.dataset.global_batches(self.gbs)
+        if not self.prefetch:
+            for items in gen:
+                out = self._schedule(items)
+                self.last_schedule = out
+                yield self._build(items, out)
+            return
+        # async: schedule batch t+1 while the caller runs step t
+        items = next(gen)
+        if self.random_baseline:
+            pending_items, pending_out = items, self._schedule(items)
+        else:
+            self.scheduler.submit(items)
+            pending_items, pending_out = items, None
+        while True:
+            if pending_out is None:
+                pending_out = self.scheduler.collect()
+            items_next = next(gen)
+            if not self.random_baseline:
+                self.scheduler.submit(items_next)
+            out, cur_items = pending_out, pending_items
+            pending_items = items_next
+            pending_out = self._schedule(items_next) if self.random_baseline else None
+            self.last_schedule = out
+            yield self._build(cur_items, out)

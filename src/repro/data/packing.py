@@ -1,0 +1,84 @@
+"""Sequence packing (paper §3.2.1): concatenate instances into one sequence.
+
+"We employ sequence packing for the LLM to concatenate instances,
+effectively fixing the batch size to 1 while making L_seq_len highly
+variable."  Segment ids preserve per-instance causal integrity (consumed by
+the packed flash-attention mask).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Sequence
+
+import numpy as np
+
+from repro.data.items import DataItem
+
+
+@dataclass
+class PackedBatch:
+    """One packed microbatch: token budget `budget`, padded to it."""
+
+    tokens: np.ndarray        # (1, budget) int32
+    labels: np.ndarray        # (1, budget) int32, -1 = ignore
+    segment_ids: np.ndarray   # (1, budget) int32, 0 = padding
+    positions: np.ndarray     # (1, budget) int32, restart per segment
+    n_items: int
+    used: int
+
+
+def pack_tokens(sequences: Sequence[np.ndarray], budget: int,
+                pad_id: int = 0) -> PackedBatch:
+    """Pack token sequences into one row of `budget` tokens (truncating the
+    overflow — callers size the budget from the scheduler)."""
+    tokens = np.full((budget,), pad_id, np.int32)
+    labels = np.full((budget,), -1, np.int32)
+    seg = np.zeros((budget,), np.int32)
+    pos = np.zeros((budget,), np.int32)
+    cur = 0
+    n = 0
+    for s_idx, s in enumerate(sequences):
+        s = np.asarray(s, np.int32)
+        take = min(len(s), budget - cur)
+        if take <= 1:
+            break
+        tokens[cur:cur + take] = s[:take]
+        labels[cur:cur + take - 1] = s[1:take]
+        seg[cur:cur + take] = s_idx + 1
+        pos[cur:cur + take] = np.arange(take)
+        cur += take
+        n += 1
+    return PackedBatch(tokens[None], labels[None], seg[None], pos[None], n, cur)
+
+
+def pack_items(items: Sequence[DataItem], budget: int,
+               tokens_per_media_item: int, vocab: int,
+               rng: np.random.Generator) -> PackedBatch:
+    """Pack DataItems (media tokens become placeholder token 1 spans)."""
+    seqs = []
+    for it in items:
+        L = min(it.llm_seq_len(tokens_per_media_item), budget)
+        seqs.append(rng.integers(2, max(3, vocab), size=L))
+    return pack_tokens(seqs, budget)
+
+
+def greedy_bin_pack(lengths: Sequence[int], budget: int) -> List[List[int]]:
+    """First-fit-decreasing packing of item lengths into budget-sized bins.
+    Returns item-index groups (used by the data loader to build microbatch
+    rows once the scheduler has fixed the groups)."""
+    order = np.argsort(lengths)[::-1]
+    bins: List[List[int]] = []
+    space: List[int] = []
+    for i in order:
+        L = min(int(lengths[i]), budget)
+        placed = False
+        for b, s in enumerate(space):
+            if s >= L:
+                bins[b].append(int(i))
+                space[b] -= L
+                placed = True
+                break
+        if not placed:
+            bins.append([int(i)])
+            space.append(budget - L)
+    return bins

@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Each kernel ships three artifacts:
+  <name>.py — pl.pallas_call + explicit BlockSpec VMEM tiling (TPU target)
+  ops.py    — jit'd public wrappers (auto-interpret on CPU)
+  ref.py    — pure-jnp oracles used by the allclose test sweeps
+"""

@@ -1,0 +1,81 @@
+"""Mamba-1 selective scan — chunked Pallas TPU kernel.
+
+    h_t = exp(dt_t ⊗ A) ⊙ h_{t-1} + (dt_t ⊙ u_t) ⊗ B_t
+    y_t = h_t · C_t + D ⊙ u_t
+
+TPU adaptation: time is chunked; channels are blocked so each program
+instance owns a (c_blk, N) state tile in VMEM scratch carried across chunk
+iterations.  Grid (B, n_cblk, n_chunks), chunk axis innermost/sequential.
+B_t/C_t (shared across channels) are re-read per channel block — they are
+(chunk, N) tiles, tiny next to the (chunk, c_blk) channel streams.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(u_ref, dt_ref, b_ref, c_ref, a_ref, d_ref, y_ref, h_scr,
+            *, n_chunks: int, chunk: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    A = a_ref[...].astype(jnp.float32)                 # (c_blk, N)
+    D = d_ref[...].astype(jnp.float32)                 # (c_blk,)
+
+    def step(t, h):
+        u_t = u_ref[0, t].astype(jnp.float32)          # (c_blk,)
+        dt_t = dt_ref[0, t].astype(jnp.float32)        # (c_blk,)
+        b_t = b_ref[0, t].astype(jnp.float32)          # (N,)
+        c_t = c_ref[0, t].astype(jnp.float32)          # (N,)
+        decay = jnp.exp(dt_t[:, None] * A)             # (c_blk, N)
+        h = h * decay + (dt_t * u_t)[:, None] * b_t[None, :]
+        y = jnp.sum(h * c_t[None, :], axis=1) + D * u_t
+        y_ref[0, t] = y.astype(y_ref.dtype)
+        return h
+
+    h_scr[...] = jax.lax.fori_loop(0, chunk, step, h_scr[...])
+
+
+def _pick(s: int, target: int) -> int:
+    b = min(s, target)
+    while s % b:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "c_blk", "interpret"))
+def mamba_scan_bsd(u, dt, B_t, C_t, A, D, *, chunk: int = 128,
+                   c_blk: int = 512, interpret: bool = False):
+    """u, dt: (B, S, di); B_t, C_t: (B, S, N); A: (di, N); D: (di,).
+    Returns y: (B, S, di)."""
+    B, S, di = u.shape
+    N = A.shape[1]
+    c = _pick(S, chunk)
+    cb = _pick(di, c_blk)
+    n_chunks, n_cblk = S // c, di // cb
+    kernel = functools.partial(_kernel, n_chunks=n_chunks, chunk=c)
+    y = pl.pallas_call(
+        kernel,
+        grid=(B, n_cblk, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, c, cb), lambda b, j, i: (b, i, j)),
+            pl.BlockSpec((1, c, cb), lambda b, j, i: (b, i, j)),
+            pl.BlockSpec((1, c, N), lambda b, j, i: (b, i, 0)),
+            pl.BlockSpec((1, c, N), lambda b, j, i: (b, i, 0)),
+            pl.BlockSpec((cb, N), lambda b, j, i: (j, 0)),
+            pl.BlockSpec((cb,), lambda b, j, i: (j,)),
+        ],
+        out_specs=pl.BlockSpec((1, c, cb), lambda b, j, i: (b, i, j)),
+        out_shape=jax.ShapeDtypeStruct((B, S, di), u.dtype),
+        scratch_shapes=[pltpu.VMEM((cb, N), jnp.float32)],
+        interpret=interpret,
+    )(u, dt, B_t, C_t, A, D)
+    return y

@@ -1,0 +1,119 @@
+"""Packed flash attention — Pallas TPU kernel.
+
+The paper's sequence packing (§3.2.1) requires attention to "process each
+original instance separately to maintain causal integrity": this kernel
+fuses segment-id masking (packing boundaries), causality and an optional
+sliding window into an online-softmax flash attention with explicit VMEM
+tiling.
+
+Layout: q is pre-arranged as (B, KH, G, S, D) (G = query groups per KV
+head — GQA/MQA-native, so each KV block is loaded once for all G groups),
+k/v as (B, KH, S, D).  Grid (B, KH, nq, nk) with the kv axis innermost and
+sequential; the online-softmax running max / denominator / accumulator live
+in VMEM scratch carried across kv steps.  Default (bq, bk) = (512, 512) —
+MXU-aligned multiples of 128 — keeps the working set
+    q (G·bq·D) + k,v (2·bk·D) + acc (G·bq·D) + p (G·bq·bk)       [f32]
+at a few MiB, inside the 16 MiB v5e VMEM for G ≤ 8, D ≤ 256.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, seg_q_ref, seg_k_ref, o_ref,
+            m_scr, l_scr, acc_scr, *, scale: float, causal: bool,
+            window: int, nk: int, bq: int, bk: int):
+    ik = pl.program_id(3)
+    iq = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)              # (G, bq, D)
+    k = k_ref[0, 0].astype(jnp.float32)              # (bk, D)
+    v = v_ref[0, 0].astype(jnp.float32)              # (bk, D)
+
+    s = jax.lax.dot_general(q, k, (((2,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    qpos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), dtype=jnp.bool_)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= qpos - kpos < window
+    seg_q = seg_q_ref[0]                             # (bq,)
+    seg_k = seg_k_ref[0]                             # (bk,)
+    mask &= seg_q[:, None] == seg_k[None, :]
+    s = jnp.where(mask[None], s, NEG_INF)            # (G, bq, bk)
+
+    m_prev = m_scr[...]                              # (G, bq)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    corr = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[..., None])
+    l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=-1)
+    pv = jax.lax.dot_general(p, v, (((2,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    acc_scr[...] = acc_scr[...] * corr[..., None] + pv
+    m_scr[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        l = l_scr[...]
+        out = acc_scr[...] / jnp.maximum(l, 1e-30)[..., None]
+        out = jnp.where((l > 0)[..., None], out, 0.0)
+        o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+def _pick(s: int, target: int) -> int:
+    b = min(s, target)
+    while s % b:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def packed_flash_attention_bkgsd(q, k, v, seg_q, seg_k, *, causal: bool = True,
+                                 window: int = 0, block_q: int = 512,
+                                 block_k: int = 512, interpret: bool = False):
+    """q: (B, KH, G, Sq, D); k, v: (B, KH, Sk, D); seg_*: (B, S) int32.
+    Returns (B, KH, G, Sq, D)."""
+    B, KH, G, Sq, D = q.shape
+    Sk = k.shape[2]
+    bq, bk = _pick(Sq, block_q), _pick(Sk, block_k)
+    nq, nk = Sq // bq, Sk // bk
+    scale = D ** -0.5
+
+    kernel = functools.partial(_kernel, scale=scale, causal=causal,
+                               window=window, nk=nk, bq=bq, bk=bk)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, KH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, bq, D), lambda b, h, i, j: (b, h, 0, i, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, i, j: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, i, j: (b, h, j, 0)),
+            pl.BlockSpec((1, bq), lambda b, h, i, j: (b, i)),
+            pl.BlockSpec((1, bk), lambda b, h, i, j: (b, j)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, bq, D),
+                               lambda b, h, i, j: (b, h, 0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KH, G, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, bq), jnp.float32),
+            pltpu.VMEM((G, bq), jnp.float32),
+            pltpu.VMEM((G, bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, seg_q, seg_k)

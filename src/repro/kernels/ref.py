@@ -1,0 +1,14 @@
+"""Pure-jnp oracles for the Pallas kernels (allclose targets).
+
+These re-export the model layers' reference implementations so the kernels
+and the models are validated against the *same* math.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.layers.attention import attend_naive as packed_attention_ref
+from repro.models.layers.mamba import ssm_scan_xla as mamba_scan_ref
+from repro.models.layers.rwkv6 import wkv_scan_xla as rwkv6_scan_ref
+
+__all__ = ["packed_attention_ref", "mamba_scan_ref", "rwkv6_scan_ref"]

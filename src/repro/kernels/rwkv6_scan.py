@@ -1,0 +1,90 @@
+"""RWKV-6 WKV recurrence — chunked Pallas TPU kernel.
+
+    S_t = diag(w_t)·S_{t-1} + k_t v_tᵀ
+    y_t = r_t·(S_{t-1} + diag(u)·k_t v_tᵀ)
+
+TPU adaptation: the recurrence is chunked along time.  Grid (B, H, n_chunks)
+with the chunk axis innermost/sequential; the (M, M) state lives in VMEM
+scratch and crosses chunk iterations without HBM round-trips.  Inside a
+chunk the per-step update runs as a fori_loop over rows held in VMEM —
+the O(M²) state update is VPU work on an (M, M) tile, M = 64 lanes wide.
+
+Inputs are pre-arranged (B, H, S, M); outputs match.  The final state
+(B, H, M, M) is emitted for decode hand-off.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, y_ref, s_out_ref, state_scr,
+            *, n_chunks: int, chunk: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    u = u_ref[0].astype(jnp.float32)                   # (M,)
+
+    def step(t, state):
+        r_t = r_ref[0, 0, t].astype(jnp.float32)       # (M,)
+        k_t = k_ref[0, 0, t].astype(jnp.float32)
+        v_t = v_ref[0, 0, t].astype(jnp.float32)
+        w_t = w_ref[0, 0, t].astype(jnp.float32)
+        kv = k_t[:, None] * v_t[None, :]               # (M, M)
+        y = jnp.sum(r_t[:, None] * (state + u[:, None] * kv), axis=0)
+        y_ref[0, 0, t] = y.astype(y_ref.dtype)
+        return w_t[:, None] * state + kv
+
+    state = jax.lax.fori_loop(0, chunk, step, state_scr[...])
+    state_scr[...] = state
+
+    @pl.when(ic == n_chunks - 1)
+    def _emit():
+        s_out_ref[0, 0] = state_scr[...]
+
+
+def _pick(s: int, target: int) -> int:
+    b = min(s, target)
+    while s % b:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def rwkv6_scan_bhsm(r, k, v, w, u, *, chunk: int = 128,
+                    interpret: bool = False):
+    """r,k,v,w: (B, H, S, M); u: (H, M).
+    Returns y: (B, H, S, M), final state (B, H, M, M) f32."""
+    B, H, S, M = r.shape
+    c = _pick(S, chunk)
+    n_chunks = S // c
+    kernel = functools.partial(_kernel, n_chunks=n_chunks, chunk=c)
+    y, s_final = pl.pallas_call(
+        kernel,
+        grid=(B, H, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, 1, c, M), lambda b, h, i: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, c, M), lambda b, h, i: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, c, M), lambda b, h, i: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, c, M), lambda b, h, i: (b, h, i, 0)),
+            pl.BlockSpec((1, M), lambda b, h, i: (h, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, c, M), lambda b, h, i: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, M, M), lambda b, h, i: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, S, M), r.dtype),
+            jax.ShapeDtypeStruct((B, H, M, M), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((M, M), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u)
+    return y, s_final

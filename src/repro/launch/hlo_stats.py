@@ -1,0 +1,252 @@
+"""Static analyzer for compiled HLO text (§Roofline measurement backbone).
+
+``compiled.cost_analysis()`` counts every `while` body ONCE, which massively
+undercounts programs that scan over layers or sequence chunks.  This module
+parses ``compiled.as_text()`` (the post-SPMD, per-device module), recovers
+while-loop trip counts from their condition computations, and accumulates:
+
+  * flops             — dot/convolution FLOPs × execution multiplicity
+  * hbm_bytes         — Σ (operand + result bytes) of top-level ops
+                        (post-fusion: each op's operands/results cross HBM;
+                        fusion-internal ops are excluded)
+  * collective_bytes  — Σ operand bytes of all-gather / all-reduce /
+                        reduce-scatter / all-to-all / collective-permute,
+                        with multiplicity
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# shape group is lazy: it grows until the first '<word>(' — the opcode call.
+# Tuple shapes may contain '/*index=N*/' comments but no parentheses, so the
+# first parenthesis after '=' belongs to the opcode's operand list.
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$")
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*->.*\{\s*$")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+
+
+def shape_bytes(shape_str: str) -> int:
+    """Bytes of 'f32[4,8]{...}' or tuple '(f32[2], bf16[4])'."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * DTYPE_BYTES[dtype]
+    return total
+
+
+def shape_dims(shape_str: str) -> Tuple[str, List[int]]:
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return "", []
+    dims = [int(d) for d in m.group(2).split(",") if d] if m.group(2) else []
+    return m.group(1), dims
+
+
+@dataclass
+class HloOp:
+    name: str
+    shape: str
+    opcode: str
+    rest: str                        # operands + attributes text
+    operand_names: List[str] = field(default_factory=list)
+
+
+@dataclass
+class HloComputation:
+    name: str
+    is_entry: bool
+    ops: List[HloOp] = field(default_factory=list)
+    shapes: Dict[str, str] = field(default_factory=dict)   # op name -> shape
+
+
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def parse_module(text: str) -> Tuple[Dict[str, HloComputation], Optional[str]]:
+    comps: Dict[str, HloComputation] = {}
+    entry: Optional[str] = None
+    cur: Optional[HloComputation] = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_RE.match(line.strip()) if "{" in line else None
+            if m and "->" in line:
+                cur = HloComputation(m.group(2), bool(m.group(1)))
+                continue
+        else:
+            stripped = line.strip()
+            if stripped == "}" or stripped.startswith("} "):
+                comps[cur.name] = cur
+                if cur.is_entry:
+                    entry = cur.name
+                cur = None
+                continue
+            m = _OP_RE.match(line)
+            if m:
+                name, shape, opcode, rest = m.groups()
+                # operands: %refs before the first attribute keyword
+                args = rest.split("),", 1)[0]
+                operands = _OPERAND_RE.findall(args)
+                op = HloOp(name, shape, opcode, rest, operands)
+                cur.ops.append(op)
+                cur.shapes[name] = shape
+    return comps, entry
+
+
+_ATTR_COMP_RE = {
+    "body": re.compile(r"body=%?([\w.\-]+)"),
+    "condition": re.compile(r"condition=%?([\w.\-]+)"),
+    "calls": re.compile(r"calls=%?([\w.\-]+)"),
+    "to_apply": re.compile(r"to_apply=%?([\w.\-]+)"),
+    "branches": re.compile(r"branch_computations={([^}]*)}"),
+}
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims={([\d,]*)}")
+_BATCH_RE = re.compile(r"lhs_batch_dims={([\d,]*)}")
+
+
+def _trip_count(cond: HloComputation) -> int:
+    """Largest integer constant in a while condition ≈ trip count."""
+    best = 1
+    for op in cond.ops:
+        for c in _CONST_RE.findall(op.rest):
+            best = max(best, int(c))
+        if op.opcode == "constant":
+            m = re.search(r"constant\((\d+)\)", f"constant({op.rest}")
+    return best
+
+
+def _dot_flops(op: HloOp, comp: HloComputation) -> float:
+    _, out_dims = shape_dims(op.shape)
+    out_elems = 1
+    for d in out_dims:
+        out_elems *= d
+    k = 1
+    m = _CONTRACT_RE.search(op.rest)
+    if m and op.operand_names:
+        lhs_shape = comp.shapes.get(op.operand_names[0], "")
+        _, lhs_dims = shape_dims(lhs_shape)
+        for idx in m.group(1).split(","):
+            if idx and int(idx) < len(lhs_dims):
+                k *= lhs_dims[int(idx)]
+    return 2.0 * out_elems * k
+
+
+@dataclass
+class HloStats:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_bytes: Dict[str, float] = field(default_factory=lambda: defaultdict(float))
+    collective_counts: Dict[str, int] = field(default_factory=lambda: defaultdict(int))
+    while_trips: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return float(sum(self.collective_bytes.values()))
+
+    def as_dict(self) -> dict:
+        return {
+            "flops": self.flops,
+            "hbm_bytes": self.hbm_bytes,
+            "collective_bytes": dict(self.collective_bytes),
+            "collective_counts": dict(self.collective_counts),
+            "total_collective_bytes": self.total_collective_bytes,
+            "while_trips": self.while_trips,
+        }
+
+
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "while", "call", "conditional", "after-all", "partition-id",
+    "replica-id", "iota",
+}
+
+
+def analyze(text: str) -> HloStats:
+    comps, entry = parse_module(text)
+    stats = HloStats()
+    if entry is None:
+        return stats
+
+    def visit(comp_name: str, mult: float, depth: int = 0,
+              count_bytes: bool = True):
+        comp = comps.get(comp_name)
+        if comp is None or depth > 32:
+            return
+        for op in comp.ops:
+            oc = op.opcode
+            if oc == "fusion":
+                # fused ops stay on-chip: count the fusion's own operand/
+                # result bytes (below), but recurse for FLOPs only.
+                m = _ATTR_COMP_RE["calls"].search(op.rest)
+                if m:
+                    visit(m.group(1), mult, depth + 1, count_bytes=False)
+            if oc == "while":
+                cond_m = _ATTR_COMP_RE["condition"].search(op.rest)
+                body_m = _ATTR_COMP_RE["body"].search(op.rest)
+                tc = _TRIP_RE.search(op.rest)
+                if tc:
+                    trips = int(tc.group(1))
+                elif cond_m and cond_m.group(1) in comps:
+                    trips = _trip_count(comps[cond_m.group(1)])
+                else:
+                    trips = 1
+                stats.while_trips[op.name] = trips
+                if body_m:
+                    visit(body_m.group(1), mult * trips, depth + 1)
+                continue
+            if oc in ("call",):
+                m = _ATTR_COMP_RE["to_apply"].search(op.rest)
+                if m:
+                    visit(m.group(1), mult, depth + 1)
+                continue
+            if oc == "conditional":
+                m = _ATTR_COMP_RE["branches"].search(op.rest)
+                if m:
+                    for br in _OPERAND_RE.findall(m.group(1)):
+                        visit(br, mult, depth + 1)
+                continue
+            # ---- leaf op accounting -------------------------------------
+            if oc == "dot":
+                stats.flops += mult * _dot_flops(op, comp)
+            elif oc == "convolution":
+                # rough: 2 * out elems * (in_ch * kernel) — fall back to
+                # 2*out*k from contracting dims if present, else skip
+                stats.flops += mult * _dot_flops(op, comp)
+            if oc in COLLECTIVES or any(oc.startswith(c) for c in COLLECTIVES):
+                kind = next(c for c in COLLECTIVES if oc.startswith(c))
+                operand_bytes = sum(
+                    shape_bytes(comp.shapes.get(o, "")) for o in op.operand_names)
+                if operand_bytes == 0:
+                    operand_bytes = shape_bytes(op.shape)
+                stats.collective_bytes[kind] += mult * operand_bytes
+                stats.collective_counts[kind] += int(mult)
+            if oc in _SKIP_BYTES_OPS or not count_bytes:
+                continue
+            operand_bytes = sum(
+                shape_bytes(comp.shapes.get(o, "")) for o in op.operand_names)
+            stats.hbm_bytes += mult * (operand_bytes + shape_bytes(op.shape))
+        return
+
+    visit(entry, 1.0)
+    return stats

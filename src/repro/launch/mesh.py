@@ -1,0 +1,32 @@
+"""Production meshes (TPU v5e target).
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state.  The dry-run sets XLA_FLAGS for 512 host devices *before* any jax
+import; tests and benchmarks see the default single device.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single pod (256 chips) or 2x16x16 two-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh over forced host devices (tests / examples)."""
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def batch_axes(mesh) -> tuple:
+    """Mesh axes that shard the batch by default: pod (if present) + data."""
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def model_axes(mesh) -> tuple:
+    return ("model",) if "model" in mesh.shape else ()

@@ -1,0 +1,4 @@
+from repro.models import model as model_lib
+from repro.models import mllm as mllm_lib
+
+__all__ = ["model_lib", "mllm_lib"]

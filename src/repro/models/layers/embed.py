@@ -1,0 +1,27 @@
+"""Token embedding / unembedding."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init(key, vocab: int, d: int, dtype=jnp.float32, scale: float = 0.02):
+    return {"w": (jax.random.normal(key, (vocab, d)) * scale).astype(dtype)}
+
+
+def encode(params, tokens, dtype=None):
+    w = params["w"]
+    out = jnp.take(w, tokens, axis=0)
+    return out.astype(dtype) if dtype is not None else out
+
+
+def decode(params, h):
+    return jnp.einsum("bsd,vd->bsv", h, params["w"].astype(h.dtype))
+
+
+def unembed_init(key, d: int, vocab: int, dtype=jnp.float32):
+    return {"w": (jax.random.normal(key, (d, vocab)) * d ** -0.5).astype(dtype)}
+
+
+def unembed(params, h):
+    return jnp.einsum("bsd,dv->bsv", h, params["w"].astype(h.dtype))

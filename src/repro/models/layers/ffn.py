@@ -1,0 +1,45 @@
+"""Dense feed-forward blocks (SwiGLU / GeGLU / GELU / ReLU^2)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.types import ModelConfig
+
+GATED = ("swiglu", "geglu")
+
+
+def _act(name: str, x):
+    if name == "swiglu":
+        return jax.nn.silu(x)
+    if name == "geglu":
+        return jax.nn.gelu(x)
+    if name == "gelu":
+        return jax.nn.gelu(x)
+    if name == "relu_sq":
+        return jnp.square(jax.nn.relu(x))
+    raise ValueError(f"unknown activation {name}")
+
+
+def init(key, cfg: ModelConfig, dtype=jnp.float32, d_ff: int | None = None):
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    kg, ku, kd = jax.random.split(key, 3)
+    s_in, s_out = d ** -0.5, ff ** -0.5
+    p = {
+        "w_up": (jax.random.normal(ku, (d, ff)) * s_in).astype(dtype),
+        "w_down": (jax.random.normal(kd, (ff, d)) * s_out).astype(dtype),
+    }
+    if cfg.activation in GATED:
+        p["w_gate"] = (jax.random.normal(kg, (d, ff)) * s_in).astype(dtype)
+    return p
+
+
+def apply(params, x, cfg: ModelConfig):
+    w_up = params["w_up"].astype(x.dtype)
+    up = jnp.einsum("bsd,df->bsf", x, w_up)
+    if cfg.activation in GATED:
+        gate = jnp.einsum("bsd,df->bsf", x, params["w_gate"].astype(x.dtype))
+        h = _act(cfg.activation, gate) * up
+    else:
+        h = _act(cfg.activation, up)
+    return jnp.einsum("bsf,fd->bsd", h, params["w_down"].astype(x.dtype))

@@ -1,0 +1,40 @@
+"""Normalization layers (RMSNorm / LayerNorm), pure functional."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rms_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype=dtype)}
+
+
+def rms_apply(params, x, eps: float = 1e-5):
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jnp.reciprocal(jnp.sqrt(var + eps))
+    return (y * params["scale"].astype(jnp.float32)).astype(dtype)
+
+
+def ln_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype=dtype), "bias": jnp.zeros((d,), dtype=dtype)}
+
+
+def ln_apply(params, x, eps: float = 1e-5):
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x32 - mu), axis=-1, keepdims=True)
+    y = (x32 - mu) * jnp.reciprocal(jnp.sqrt(var + eps))
+    return (y * params["scale"].astype(jnp.float32)
+            + params["bias"].astype(jnp.float32)).astype(dtype)
+
+
+def group_norm_heads(x, n_heads: int, eps: float = 1e-5):
+    """GroupNorm over head groups for the RWKV6 output (no learned affine)."""
+    b, s, d = x.shape
+    xh = x.reshape(b, s, n_heads, d // n_heads).astype(jnp.float32)
+    mu = jnp.mean(xh, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xh - mu), axis=-1, keepdims=True)
+    y = (xh - mu) * jnp.reciprocal(jnp.sqrt(var + eps))
+    return y.reshape(b, s, d).astype(x.dtype)

@@ -1,0 +1,86 @@
+"""Serving steps: prefill (forward over the prompt) and batched decode.
+
+Decode shapes in the assignment lower `serve_step`: ONE new token against a
+KV cache of `seq_len` — the cache arrays are step inputs/outputs so the
+dry-run shards them like real serving state.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.types import ModelConfig
+from repro.models import model as model_lib
+from repro.models.model import FwdCtx
+
+
+def make_prefill_step(cfg: ModelConfig, ctx: Optional[FwdCtx] = None,
+                      last_only: bool = True) -> Callable:
+    """prefill(params, batch) -> logits.
+
+    Serving prefill only needs the *last* position's logits (next-token
+    sampling) — materializing the (B, S, vocab) tensor at 32k × 200k-vocab
+    would be tens of GB per chip for no reason.  Encoder-only models
+    (`causal=False`) keep the full output (their "prefill" is encoding)."""
+    import dataclasses
+
+    ctx = ctx or FwdCtx(mode="prefill", remat=False)
+    if last_only and cfg.is_decoder and cfg.has_lm_head:
+        ctx = dataclasses.replace(ctx, return_hidden=True)
+
+    def prefill(params, batch):
+        if "tokens" in batch:
+            out, _, _ = model_lib.forward(params, cfg,
+                                          tokens=batch["tokens"],
+                                          segment_ids=batch.get("segment_ids"),
+                                          ctx=ctx)
+        else:
+            out, _, _ = model_lib.forward(params, cfg,
+                                          embeds=batch["frame_embeds"],
+                                          ctx=ctx)
+        if ctx.return_hidden:
+            from repro.models.layers import embed as embed_lib
+            h_last = out[:, -1:]
+            if cfg.tie_embeddings or "unembed" not in params:
+                return embed_lib.decode(params["embed"], h_last)
+            return embed_lib.unembed(params["unembed"], h_last)
+        return out
+
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig, ctx: Optional[FwdCtx] = None) -> Callable:
+    """decode(params, caches, tokens (B,), pos ()) -> (logits, caches)."""
+    import dataclasses
+
+    base_ctx = ctx
+
+    def decode(params, caches, tokens, pos):
+        ctx = dataclasses.replace(base_ctx, mode="decode", remat=False) \
+            if base_ctx is not None else FwdCtx(mode="decode", remat=False)
+        logits, new_caches, _ = model_lib.decode_step(params, cfg, tokens,
+                                                      caches, pos, ctx=ctx)
+        return logits, new_caches
+
+    return decode
+
+
+def greedy_generate(cfg: ModelConfig, params, prompt, max_new: int,
+                    max_len: int, kv_dtype=jnp.float32):
+    """Simple batched greedy decoding driver (examples/serving)."""
+    B, S = prompt.shape
+    caches = model_lib.init_cache(cfg, B, max_len, kv_dtype)
+    decode = jax.jit(make_decode_step(cfg))
+    tok = prompt[:, 0]
+    out = [tok]
+    logits = None
+    for t in range(S + max_new - 1):
+        logits, caches = decode(params, caches, tok, t)
+        if t + 1 < S:
+            tok = prompt[:, t + 1]
+        else:
+            tok = jnp.argmax(logits, axis=-1).astype(prompt.dtype)
+        out.append(tok)
+    return jnp.stack(out, axis=1)

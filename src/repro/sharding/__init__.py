@@ -1,0 +1,21 @@
+from repro.sharding.partition import (
+    AxisAssignment,
+    ModuleAssignment,
+    sanitize_spec,
+    param_specs,
+    opt_state_specs,
+    named,
+    activation_spec,
+    tokens_spec,
+)
+
+__all__ = [
+    "AxisAssignment",
+    "ModuleAssignment",
+    "sanitize_spec",
+    "param_specs",
+    "opt_state_specs",
+    "named",
+    "activation_spec",
+    "tokens_spec",
+]

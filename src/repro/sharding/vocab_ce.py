@@ -1,0 +1,96 @@
+"""Vocab-parallel cross-entropy (Megatron-style) via shard_map.
+
+For 100k–256k vocabularies, letting the SPMD partitioner choose a strategy
+for the (tokens, vocab) logits + CE + dW backward is fragile: it tends to
+materialize a replicated fp32 logits tensor (8+ GB at 128k tokens).  This
+kernel-level formulation makes the efficient strategy explicit:
+
+  * every model-axis shard computes logits for its vocab slice only
+    (local einsum, no comm);
+  * softmax statistics reduce with pmax/psum over the model axis
+    (tokens-sized messages, not logits-sized);
+  * the gold logit is found by local one-hot masking against the shard's
+    vocab offset, then psum;
+  * shard_map's transpose rules produce the partial-dW + psum(data) backward
+    (the 131 MB all-reduce, never an 8 GB all-gather).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def make_vocab_parallel_ce(mesh: Mesh, batch_axes: Tuple[str, ...],
+                           model_axes: Tuple[str, ...], vocab: int,
+                           tied: bool) -> Optional[Callable]:
+    """Returns ce(w, h, labels) -> mean NLL, or None if not applicable.
+
+    w: (vocab, d) when tied (embedding table) else (d, vocab).
+    h: (B, S, d) replicated over model axes, batch-sharded over batch_axes.
+    labels: (B, S) int32, -1 = ignore.
+    """
+    if not model_axes:
+        return None
+    msize = 1
+    for a in model_axes:
+        msize *= mesh.shape[a]
+    if msize == 1 or vocab % msize != 0:
+        return None
+    maxis = model_axes[0] if len(model_axes) == 1 else model_axes
+    v_local = vocab // msize
+
+    # tokens (B·S flattened) shard over the batch axes: divisibility holds
+    # whenever B·S is a multiple of the dp degree (true even at batch 1 for
+    # non-trivial sequence lengths)
+    w_spec = P(tuple(model_axes), None) if tied else P(None, tuple(model_axes))
+    h_spec = P(tuple(batch_axes) or None, None)
+    l_spec = P(tuple(batch_axes) or None)
+
+    def local_fn(w_l, h_l, labels_l):
+        h32 = h_l.astype(jnp.float32)
+        if tied:
+            logits = jnp.einsum("td,vd->tv", h32, w_l.astype(jnp.float32))
+        else:
+            logits = jnp.einsum("td,dv->tv", h32, w_l.astype(jnp.float32))
+        # global softmax statistics over the sharded vocab.  The max is a
+        # gradient-free stabilizer; pmax has no JVP rule, so gather the
+        # per-shard maxima (tokens-sized) and reduce locally instead.
+        local_max = jnp.max(jax.lax.stop_gradient(logits), axis=-1)
+        mx = jnp.max(jax.lax.all_gather(local_max, maxis), axis=0)  # (B, S)
+        ex_sum = jax.lax.psum(
+            jnp.sum(jnp.exp(logits - mx[..., None]), axis=-1), maxis)
+        lse = jnp.log(ex_sum) + mx
+        # gold logit: local one-hot against this shard's vocab offset
+        shard = jax.lax.axis_index(model_axes[0])
+        for a in model_axes[1:]:
+            shard = shard * mesh.shape[a] + jax.lax.axis_index(a)
+        offset = shard * v_local
+        ids = jnp.clip(labels_l, 0) - offset
+        onehot = ids[..., None] == jax.lax.broadcasted_iota(
+            jnp.int32, labels_l.shape + (v_local,), labels_l.ndim)
+        gold = jax.lax.psum(
+            jnp.sum(jnp.where(onehot, logits, 0.0), axis=-1), maxis)
+        nll = lse - gold
+        mask = (labels_l >= 0).astype(jnp.float32)
+        loss_sum = jnp.sum(nll * mask)
+        count = jnp.sum(mask)
+        # reduce over every mesh axis so the scalar is replicated
+        for a in batch_axes:
+            loss_sum = jax.lax.psum(loss_sum, a)
+            count = jax.lax.psum(count, a)
+        # model-axis contributions are already identical (post-psum)
+        return loss_sum / jnp.maximum(count, 1.0)
+
+    sm = jax.shard_map(local_fn, mesh=mesh,
+                       in_specs=(w_spec, h_spec, l_spec),
+                       out_specs=P(), check_vma=False)
+
+    def ce(w, h, labels):
+        d = h.shape[-1]
+        return sm(w, h.reshape(-1, d), labels.reshape(-1))
+
+    return ce

@@ -1,0 +1,16 @@
+from repro.train.loss import cross_entropy, masked_cross_entropy
+from repro.train.optim import AdamWConfig, adamw_init, adamw_update, cosine_lr
+from repro.train.step import make_train_step, make_loss_fn
+from repro.train import checkpoint
+
+__all__ = [
+    "cross_entropy",
+    "masked_cross_entropy",
+    "AdamWConfig",
+    "adamw_init",
+    "adamw_update",
+    "cosine_lr",
+    "make_train_step",
+    "make_loss_fn",
+    "checkpoint",
+]

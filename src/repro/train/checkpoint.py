@@ -1,0 +1,46 @@
+"""Checkpointing: pytree <-> .npz + JSON metadata (no external deps)."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+from repro.common.pytree import tree_paths
+
+
+def save(path: str, tree: Any, meta: Optional[dict] = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = tree_paths(tree)
+    arrays = {p: np.asarray(leaf) for p, leaf in flat}
+    np.savez(path if path.endswith(".npz") else path + ".npz", **arrays)
+    meta_path = (path[:-4] if path.endswith(".npz") else path) + ".meta.json"
+    with open(meta_path, "w") as f:
+        json.dump({"meta": meta or {},
+                   "dtypes": {p: str(a.dtype) for p, a in arrays.items()},
+                   "shapes": {p: list(a.shape) for p, a in arrays.items()}},
+                  f, indent=1)
+
+
+def restore(path: str, like: Any) -> Any:
+    """Restore into the structure of `like` (shapes/dtypes validated)."""
+    npz = np.load(path if path.endswith(".npz") else path + ".npz")
+    flat_like = tree_paths(like)
+    leaves = []
+    for p, ref in flat_like:
+        if p not in npz:
+            raise KeyError(f"checkpoint missing leaf {p}")
+        arr = npz[p]
+        if tuple(arr.shape) != tuple(ref.shape):
+            raise ValueError(f"{p}: shape {arr.shape} != expected {ref.shape}")
+        leaves.append(jax.numpy.asarray(arr, dtype=ref.dtype))
+    treedef = jax.tree_util.tree_structure(like)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def load_meta(path: str) -> dict:
+    meta_path = (path[:-4] if path.endswith(".npz") else path) + ".meta.json"
+    with open(meta_path) as f:
+        return json.load(f)

@@ -1,0 +1,35 @@
+"""Losses."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cross_entropy(logits, labels, *, z_loss: float = 0.0):
+    """Mean CE over labels >= 0 (packed padding uses -1)."""
+    return masked_cross_entropy(logits, labels, labels >= 0, z_loss=z_loss)
+
+
+def masked_cross_entropy(logits, labels, mask, *, z_loss: float = 0.0):
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    # gather-free gold lookup: a take_along_axis over a vocab-sharded logits
+    # tensor forces an all-gather under SPMD; the one-hot masked sum
+    # partitions cleanly (elementwise + psum over the sharded vocab dim).
+    vocab = logits.shape[-1]
+    onehot = jnp.clip(labels, 0)[..., None] == jax.lax.broadcasted_iota(
+        jnp.int32, labels.shape + (vocab,), labels.ndim)
+    gold = jnp.sum(jnp.where(onehot, logits, 0.0), axis=-1)
+    nll = lse - gold
+    if z_loss:
+        nll = nll + z_loss * jnp.square(lse)
+    mask = mask.astype(jnp.float32)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    return (nll * mask).sum() / denom
+
+
+def token_accuracy(logits, labels):
+    pred = jnp.argmax(logits, axis=-1)
+    mask = (labels >= 0).astype(jnp.float32)
+    correct = (pred == labels).astype(jnp.float32) * mask
+    return correct.sum() / jnp.maximum(mask.sum(), 1.0)

@@ -1,0 +1,68 @@
+"""AdamW with decoupled weight decay + cosine schedule (pure functions)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.pytree import global_norm
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+def adamw_init(params):
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+    return {"m": zeros,
+            "v": jax.tree.map(jnp.zeros_like, zeros),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(cfg: AdamWConfig, params, grads, state, lr=None):
+    lr = cfg.lr if lr is None else lr
+    step = state["step"] + 1
+    if cfg.grad_clip:
+        gnorm = global_norm(grads)
+        scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m = cfg.b1 * m + (1 - cfg.b1) * g32
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g32)
+        mhat = m / (1 - cfg.b1 ** step.astype(jnp.float32))
+        vhat = v / (1 - cfg.b2 ** step.astype(jnp.float32))
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if p.ndim >= 2 and cfg.weight_decay:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    flat_p, tree = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_m = jax.tree_util.tree_leaves(state["m"])
+    flat_v = jax.tree_util.tree_leaves(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree_util.tree_unflatten(tree, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(tree, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(tree, [o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step}
+
+
+def cosine_lr(base_lr: float, warmup: int, total: int, min_frac: float = 0.1):
+    def schedule(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * (min_frac + (1 - min_frac) * 0.5 *
+                         (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup, warm, cos)
+
+    return schedule

@@ -1,0 +1,41 @@
+"""Adaptive Correction tests (paper §3.4.3 / Fig. 15)."""
+import numpy as np
+
+from repro.core.scheduler.adaptive import AdaptiveCorrection
+
+
+def test_learns_systematic_deviation():
+    corr = AdaptiveCorrection(window=1000)
+    # shape bucket 1024 consistently runs 1.5x slower than predicted
+    for _ in range(10):
+        corr.observe("llm", 1000.0, predicted_dur=1.0, actual_dur=1.5)
+    assert abs(corr.correct("llm", 1000.0, 2.0) - 3.0) < 1e-6
+    # other buckets untouched
+    assert corr.correct("llm", 64.0, 2.0) == 2.0
+
+
+def test_small_deviations_not_applied():
+    corr = AdaptiveCorrection(window=1000, deviation_threshold=0.05)
+    for _ in range(10):
+        corr.observe("llm", 1000.0, 1.0, 1.02)
+    assert corr.correct("llm", 1000.0, 2.0) == 2.0
+
+
+def test_cost_benefit_deactivation():
+    """When observed deviations stay below the monitoring cost, the tracker
+    turns itself off (Fig. 15's negative-net-speedup region)."""
+    corr = AdaptiveCorrection(monitoring_cost=0.04, window=32)
+    for _ in range(64):
+        corr.observe("llm", 512.0, 1.0, 1.01)   # 1% anomaly < 4% cost
+    assert not corr.enabled
+    # high-anomaly workload keeps it on
+    corr2 = AdaptiveCorrection(monitoring_cost=0.04, window=32)
+    for _ in range(64):
+        corr2.observe("llm", 512.0, 1.0, 1.5)
+    assert corr2.enabled
+    assert corr2.net_speedup() > 0
+
+
+def test_bucketing_is_logarithmic():
+    assert AdaptiveCorrection.bucket(1000) == AdaptiveCorrection.bucket(1100)
+    assert AdaptiveCorrection.bucket(1000) != AdaptiveCorrection.bucket(3000)

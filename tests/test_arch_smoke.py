@@ -1,0 +1,121 @@
+"""Per-architecture smoke tests (deliverable f).
+
+For every assigned architecture: instantiate a REDUCED variant of the same
+family (<=2-ish layers, d_model<=256, <=4 experts), run one forward and one
+train step on CPU, assert output shapes and finiteness; decoder archs also
+run a decode step against a reduced cache.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.common.types import MLLMConfig
+from repro.configs import ASSIGNED, get_config
+from repro.models import mllm as mllm_lib
+from repro.models import model as model_lib
+from repro.models.model import FwdCtx
+from repro.train.optim import AdamWConfig, adamw_init
+from repro.train.step import make_train_step
+
+B, S = 2, 32
+
+
+def _decoder_batch(cfg, n_mb=1):
+    rng = np.random.default_rng(0)
+    toks = rng.integers(1, cfg.vocab_size, size=(n_mb, B, S)).astype(np.int32)
+    labels = np.roll(toks, -1, axis=-1)
+    labels[..., -1] = -1
+    return {"tokens": jnp.asarray(toks), "labels": jnp.asarray(labels)}
+
+
+def _audio_batch(cfg, n_mb=1):
+    rng = np.random.default_rng(0)
+    emb = rng.standard_normal((n_mb, B, S, cfg.input_embed_dim)).astype(np.float32)
+    labels = rng.integers(0, cfg.vocab_size, size=(n_mb, B, S)).astype(np.int32)
+    labels[..., ::2] = -1           # only masked positions predicted
+    return {"frame_embeds": jnp.asarray(emb), "labels": jnp.asarray(labels)}
+
+
+def _mllm_batch(mcfg: MLLMConfig, n_mb=1):
+    rng = np.random.default_rng(0)
+    Tm, Tt = 16, S
+    de = mcfg.stub.embed_dim
+    media = rng.standard_normal((n_mb, B, Tm, de)).astype(np.float32)
+    toks = rng.integers(1, mcfg.llm.vocab_size, size=(n_mb, B, Tt)).astype(np.int32)
+    labels = np.roll(toks, -1, axis=-1)
+    labels[..., -1] = -1
+    return {
+        "media_embeds": jnp.asarray(media),
+        "media_mask": jnp.ones((n_mb, B, Tm), jnp.int32),
+        "text_tokens": jnp.asarray(toks),
+        "text_mask": jnp.ones((n_mb, B, Tt), jnp.int32),
+        "labels": jnp.asarray(labels),
+    }
+
+
+def _batch_for(desc, n_mb=1):
+    if isinstance(desc, MLLMConfig):
+        return _mllm_batch(desc, n_mb)
+    if desc.input_embed_dim > 0:
+        return _audio_batch(desc, n_mb)
+    return _decoder_batch(desc, n_mb)
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_reduced_forward(arch):
+    spec = get_config(arch)
+    desc = spec.reduced_desc()
+    params = (mllm_lib.init if isinstance(desc, MLLMConfig)
+              else model_lib.init)(jax.random.PRNGKey(0), desc)
+    ctx = FwdCtx(mode="train", attn_impl="naive", moe_impl="dense")
+    batch = jax.tree.map(lambda a: a[0], _batch_for(desc))
+    if isinstance(desc, MLLMConfig):
+        logits, _ = mllm_lib.forward_train(params, desc, batch, ctx=ctx)
+        assert logits.shape == (B, S, desc.llm.vocab_size)
+    elif desc.input_embed_dim > 0:
+        logits, _, _ = model_lib.forward(params, desc,
+                                         embeds=batch["frame_embeds"], ctx=ctx)
+        assert logits.shape == (B, S, desc.vocab_size)
+    else:
+        logits, _, _ = model_lib.forward(params, desc, tokens=batch["tokens"],
+                                         ctx=ctx)
+        assert logits.shape == (B, S, desc.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_reduced_train_step(arch):
+    spec = get_config(arch)
+    desc = spec.reduced_desc()
+    params = (mllm_lib.init if isinstance(desc, MLLMConfig)
+              else model_lib.init)(jax.random.PRNGKey(0), desc)
+    opt = adamw_init(params)
+    ctx = FwdCtx(mode="train", attn_impl="naive", moe_impl="dense")
+    step = jax.jit(make_train_step(desc, AdamWConfig(lr=1e-3), ctx=ctx))
+    batch = _batch_for(desc, n_mb=2)
+    new_params, new_opt, metrics = step(params, opt, batch, 1e-3)
+    assert np.isfinite(float(metrics["loss"]))
+    # params actually moved
+    delta = sum(float(jnp.abs(a - b).sum()) for a, b in zip(
+        jax.tree_util.tree_leaves(params),
+        jax.tree_util.tree_leaves(new_params)))
+    assert delta > 0
+
+
+@pytest.mark.parametrize("arch", [a for a in ASSIGNED
+                                  if get_config(a).llm_cfg.is_decoder])
+def test_reduced_decode_step(arch):
+    spec = get_config(arch)
+    desc = spec.reduced_desc()
+    cfg = desc.llm if isinstance(desc, MLLMConfig) else desc
+    params = model_lib.init(jax.random.PRNGKey(0), cfg) \
+        if not isinstance(desc, MLLMConfig) \
+        else mllm_lib.init(jax.random.PRNGKey(0), desc)["llm"]
+    caches = model_lib.init_cache(cfg, B, 64, kv_dtype=jnp.float32)
+    tok = jnp.ones((B,), jnp.int32)
+    logits, caches, _ = model_lib.decode_step(params, cfg, tok, caches, 0)
+    assert logits.shape == (B, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))

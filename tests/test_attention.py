@@ -1,0 +1,80 @@
+"""XLA flash attention (custom VJP) vs naive oracle: fwd + gradients."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.layers.attention import attend_naive, flash_attention_xla
+
+CASES = [
+    # B, S, H, KH, D, causal, window, segs
+    (2, 128, 4, 2, 32, True, 0, True),
+    (1, 96, 4, 1, 32, True, 24, True),
+    (2, 64, 4, 4, 32, False, 0, False),
+    (1, 128, 8, 8, 64, True, 0, False),
+]
+
+
+def _inputs(B, S, H, KH, D, segs):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, S, H, D))
+    k = jax.random.normal(ks[1], (B, S, KH, D))
+    v = jax.random.normal(ks[2], (B, S, KH, D))
+    seg = None
+    if segs:
+        seg = jnp.concatenate([jnp.ones((B, S // 2), jnp.int32),
+                               jnp.full((B, S - S // 2), 2, jnp.int32)], 1)
+    return q, k, v, seg
+
+
+@pytest.mark.parametrize("B,S,H,KH,D,causal,window,segs", CASES)
+def test_flash_forward_matches_naive(B, S, H, KH, D, causal, window, segs):
+    q, k, v, seg = _inputs(B, S, H, KH, D, segs)
+    out_n = attend_naive(q, k, v, causal=causal, window=window,
+                         seg_q=seg, seg_k=seg)
+    out_f = flash_attention_xla(q, k, v, causal=causal, window=window,
+                                seg_q=seg, seg_k=seg, block_q=32, block_k=32)
+    np.testing.assert_allclose(np.asarray(out_n), np.asarray(out_f),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("B,S,H,KH,D,causal,window,segs", CASES)
+def test_flash_custom_vjp_matches_naive_grads(B, S, H, KH, D, causal,
+                                              window, segs):
+    q, k, v, seg = _inputs(B, S, H, KH, D, segs)
+
+    def loss(fn):
+        def inner(q, k, v):
+            o = fn(q, k, v)
+            return jnp.sum(jnp.square(o) + o)
+        return inner
+
+    fn_n = lambda q, k, v: attend_naive(q, k, v, causal=causal, window=window,
+                                        seg_q=seg, seg_k=seg)
+    fn_f = lambda q, k, v: flash_attention_xla(
+        q, k, v, causal=causal, window=window, seg_q=seg, seg_k=seg,
+        block_q=32, block_k=32)
+    gn = jax.grad(loss(fn_n), argnums=(0, 1, 2))(q, k, v)
+    gf = jax.grad(loss(fn_f), argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gn, gf):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=5e-3, atol=5e-4)
+
+
+def test_flash_no_quadratic_residuals():
+    """The custom VJP must not save S^2 probabilities: check the jaxpr of
+    the VJP for any (S, S)-sized residual."""
+    S = 256
+    q, k, v, _ = _inputs(1, S, 2, 2, 16, False)
+
+    def f(q, k, v):
+        return jnp.sum(flash_attention_xla(q, k, v, block_q=32, block_k=32))
+
+    # residuals = closure of the VJP function
+    _, vjp = jax.vjp(f, q, k, v)
+    leaves = jax.tree_util.tree_leaves(vjp)
+    for leaf in leaves:
+        if hasattr(leaf, "shape"):
+            assert not (leaf.ndim >= 2 and leaf.shape[-1] == S
+                        and leaf.shape[-2] == S), \
+                f"quadratic residual {leaf.shape}"

@@ -1,0 +1,57 @@
+"""HLO analyzer tests — the roofline's measurement backbone."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.hlo_stats import analyze, shape_bytes
+
+
+def test_shape_bytes():
+    assert shape_bytes("f32[4,8]{1,0}") == 128
+    assert shape_bytes("bf16[10]") == 20
+    assert shape_bytes("(s32[], f32[2,2]{1,0})") == 4 + 16
+    assert shape_bytes("pred[7]") == 7
+
+
+def test_dot_flops_simple():
+    A = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    B = jax.ShapeDtypeStruct((128, 32), jnp.float32)
+    co = jax.jit(lambda a, b: a @ b).lower(A, B).compile()
+    st = analyze(co.as_text())
+    np.testing.assert_allclose(st.flops, 2 * 64 * 128 * 32)
+
+
+def test_scan_trip_count_multiplies_flops():
+    A = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+
+    def f(x):
+        def body(c, _):
+            return c @ c, None
+        out, _ = jax.lax.scan(body, x, None, length=12)
+        return out
+
+    st = analyze(jax.jit(f).lower(A).compile().as_text())
+    np.testing.assert_allclose(st.flops, 12 * 2 * 32 ** 3)
+    assert 12 in st.while_trips.values()
+
+
+def test_nested_scan_multiplies():
+    A = jax.ShapeDtypeStruct((16, 16), jnp.float32)
+
+    def f(x):
+        def outer(c, _):
+            def inner(c2, _):
+                return c2 @ c2, None
+            c2, _ = jax.lax.scan(inner, c, None, length=3)
+            return c2, None
+        out, _ = jax.lax.scan(outer, x, None, length=4)
+        return out
+
+    st = analyze(jax.jit(f).lower(A).compile().as_text())
+    np.testing.assert_allclose(st.flops, 12 * 2 * 16 ** 3)
+
+
+def test_hbm_bytes_positive_and_scaled():
+    A = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    st1 = analyze(jax.jit(lambda x: x + 1).lower(A).compile().as_text())
+    assert st1.hbm_bytes >= 2 * 256 * 256 * 4   # read + write at least

@@ -1,0 +1,131 @@
+"""Pallas kernel validation: shape/dtype sweeps vs. pure-jnp oracles.
+
+Kernels execute in interpret mode on CPU (the exact TPU program, run
+op-by-op) and must match ``repro.kernels.ref`` to float tolerance.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _mk_qkv(key, B, S, H, KH, D, dtype):
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, S, H, D), dtype=jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, KH, D), dtype=jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, KH, D), dtype=jnp.float32)
+    return q.astype(dtype), k.astype(dtype), v.astype(dtype)
+
+
+def _segments(key, B, S, n_seg):
+    """Contiguous segments 1..n_seg (0 = padding tail)."""
+    lens = jax.random.randint(key, (B, n_seg), 1, max(2, S // n_seg + 1))
+    seg = np.zeros((B, S), np.int32)
+    for b in range(B):
+        cur = 0
+        for i, L in enumerate(np.asarray(lens)[b]):
+            L = int(L)
+            seg[b, cur:cur + L] = i + 1
+            cur += L
+            if cur >= S:
+                break
+    return jnp.asarray(seg)
+
+
+ATTN_CASES = [
+    # (B, S, H, KH, D, causal, window, dtype)
+    (1, 128, 4, 4, 64, True, 0, jnp.float32),
+    (2, 256, 8, 2, 64, True, 0, jnp.float32),       # GQA
+    (2, 128, 4, 1, 64, True, 0, jnp.float32),       # MQA
+    (1, 256, 4, 4, 128, True, 64, jnp.float32),     # sliding window
+    (2, 128, 4, 2, 64, False, 0, jnp.float32),      # bidirectional (encoder)
+    (1, 128, 4, 2, 64, True, 0, jnp.bfloat16),
+    (1, 96, 2, 2, 32, True, 0, jnp.float32),        # non-pow2 seq
+]
+
+
+@pytest.mark.parametrize("B,S,H,KH,D,causal,window,dtype", ATTN_CASES)
+def test_packed_flash_attention(B, S, H, KH, D, causal, window, dtype):
+    key = jax.random.PRNGKey(42)
+    q, k, v = _mk_qkv(key, B, S, H, KH, D, dtype)
+    seg = _segments(jax.random.PRNGKey(7), B, S, n_seg=3)
+    got = ops.packed_flash_attention(q, k, v, segment_ids=seg, causal=causal,
+                                     window=window, block_q=64, block_k=64)
+    want = ref.packed_attention_ref(q, k, v, causal=causal, window=window,
+                                    seg_q=seg, seg_k=seg)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_packed_flash_attention_respects_boundaries():
+    """Tokens must not attend across packing boundaries: identical segment
+    content -> identical outputs regardless of what is packed after it."""
+    B, S, H, D = 1, 128, 2, 32
+    key = jax.random.PRNGKey(0)
+    q, k, v = _mk_qkv(key, B, S, H, H, D, jnp.float32)
+    seg = jnp.asarray(np.r_[np.ones(64), np.full(64, 2)].astype(np.int32))[None]
+    out = ops.packed_flash_attention(q, k, v, segment_ids=seg,
+                                     block_q=32, block_k=32)
+    # replace the second segment with garbage; first segment output unchanged
+    q2 = q.at[:, 64:].set(123.0)
+    k2 = k.at[:, 64:].set(-7.0)
+    v2 = v.at[:, 64:].set(0.5)
+    out2 = ops.packed_flash_attention(q2, k2, v2, segment_ids=seg,
+                                      block_q=32, block_k=32)
+    np.testing.assert_allclose(np.asarray(out[:, :64]),
+                               np.asarray(out2[:, :64]), rtol=1e-5, atol=1e-5)
+
+
+RWKV_CASES = [
+    (1, 64, 2, 32, 32, jnp.float32),
+    (2, 128, 4, 64, 32, jnp.float32),
+    (1, 96, 2, 64, 48, jnp.float32),                 # non-pow2 seq/chunk
+    (1, 64, 2, 32, 64, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("B,S,H,M,chunk,dtype", RWKV_CASES)
+def test_rwkv6_scan(B, S, H, M, chunk, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(3), 5)
+    r = jax.random.normal(ks[0], (B, S, H, M)).astype(dtype)
+    k = jax.random.normal(ks[1], (B, S, H, M)).astype(dtype)
+    v = jax.random.normal(ks[2], (B, S, H, M)).astype(dtype)
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (B, S, H, M))).astype(dtype)
+    u = (jax.random.normal(ks[4], (H, M)) * 0.1).astype(dtype)
+    y, s = ops.rwkv6_scan(r, k, v, w, u, chunk=chunk)
+    y_ref, s_ref = ref.rwkv6_scan_ref(r, k, v, w, u)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y_ref, np.float32), rtol=tol, atol=tol)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref),
+                               rtol=tol, atol=tol)
+
+
+MAMBA_CASES = [
+    (1, 64, 64, 8, 32, 32, jnp.float32),
+    (2, 128, 128, 16, 64, 64, jnp.float32),
+    (1, 96, 64, 16, 48, 32, jnp.float32),
+    (1, 64, 128, 16, 32, 128, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("B,S,di,N,chunk,c_blk,dtype", MAMBA_CASES)
+def test_mamba_scan(B, S, di, N, chunk, c_blk, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(5), 6)
+    u = jax.random.normal(ks[0], (B, S, di)).astype(dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, di)) - 1).astype(dtype)
+    B_t = jax.random.normal(ks[2], (B, S, N)).astype(dtype)
+    C_t = jax.random.normal(ks[3], (B, S, N)).astype(dtype)
+    A = -jnp.exp(jax.random.normal(ks[4], (di, N)) * 0.3)
+    D = jax.random.normal(ks[5], (di,))
+    y, _ = ops.mamba_scan(u, dt, B_t, C_t, A, D, chunk=chunk, c_blk=c_blk)
+    y_ref, _ = ref.mamba_scan_ref(u, dt, B_t, C_t, A, D)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 2e-4
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y_ref, np.float32), rtol=tol, atol=tol)

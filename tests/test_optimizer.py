@@ -1,0 +1,95 @@
+"""Data-aware 3D Parallelism Optimizer tests (paper §3.3, Algorithm 1)."""
+import numpy as np
+import pytest
+
+from repro.common.types import ModelConfig
+from repro.core.engine import DFLOPEngine
+from repro.core.optimizer.space import (ClusterSpec, ParallelismPlan,
+                                        enumerate_configs, find_combs)
+from repro.data.synthetic import MixedDataset
+
+ENC = ModelConfig(name="enc", family="vlm-enc", n_layers=12, d_model=512,
+                  n_heads=8, n_kv_heads=8, d_ff=2048, vocab_size=0,
+                  causal=False, use_rope=False, has_lm_head=False)
+LLM = ModelConfig(name="llm", family="dense", n_layers=16, d_model=1024,
+                  n_heads=16, n_kv_heads=4, d_ff=4096, vocab_size=32000)
+
+
+def _engine(n_chips=32, mem=16e9):
+    ds = MixedDataset("mixed", seed=0, tokens_per_media_item=64)
+    eng = DFLOPEngine(llm_cfg=LLM, enc_cfg=ENC, e_seq_len=196,
+                      cluster=ClusterSpec(n_chips, 16, mem_bytes=mem),
+                      tokens_per_media_item=64)
+    return eng.profile(ds)
+
+
+def test_find_combs_products():
+    for n in (8, 24, 96):
+        for c in find_combs(n, max_tp=16):
+            assert c.tp * c.pp * c.dp == n
+            assert c.tp in (1, 2, 4, 8, 16)
+
+
+def test_enumerate_configs_chip_conservation():
+    cluster = ClusterSpec(16, 8)
+    for ep, lp in enumerate_configs(cluster, has_encoder=True):
+        assert ep.chips + lp.chips == 16
+    for ep, lp in enumerate_configs(cluster, has_encoder=False):
+        assert ep is None and lp.chips == 16
+
+
+def test_search_returns_feasible_plan():
+    eng = _engine()
+    res = eng.plan(gbs=64)
+    assert res.found
+    plan = res.plan
+    assert plan.chips == 32
+    assert plan.n_mb >= 1
+    assert np.isfinite(res.makespan) and res.makespan > 0
+
+
+def test_search_dominates_every_uniform_baseline_with_partitioning():
+    """θ* must beat (or match) any *partitioned* configuration; uniform
+    colocated baselines live outside Θ (Eq. 3) so they are compared in the
+    benchmarks instead."""
+    eng = _engine()
+    res = eng.plan(gbs=64)
+    opt = __import__("repro.core.optimizer.search",
+                     fromlist=["ParallelismOptimizer"])
+    # re-run search with history to confirm the min was taken
+    from repro.core.optimizer.search import ParallelismOptimizer
+    o = ParallelismOptimizer(eng.cluster, eng.perf, keep_history=True)
+    res2 = o.search(eng.dist, 64)
+    assert res2.found
+    best_from_history = min(t for _, t in res2.history)
+    np.testing.assert_allclose(res2.makespan, best_from_history, rtol=1e-9)
+
+
+def test_memory_constraint_prunes():
+    """With a tiny memory cap, fewer configurations are feasible; with an
+    impossible cap, none are."""
+    rich = _engine(mem=64e9).plan(gbs=64)
+    poor = _engine(mem=2e9).plan(gbs=64)
+    none = _engine(mem=1e6).plan(gbs=64)
+    assert rich.n_feasible >= poor.n_feasible
+    assert not none.found
+    # more memory never hurts the optimum
+    assert rich.makespan <= poor.makespan + 1e-12
+
+
+def test_optimizer_latency_subsecond_at_1024_chips():
+    """Fig. 16a: optimizer overhead stays in the hundreds of ms."""
+    ds = MixedDataset("mixed", seed=0, tokens_per_media_item=64)
+    eng = DFLOPEngine(llm_cfg=LLM, enc_cfg=ENC, e_seq_len=196,
+                      cluster=ClusterSpec(1024, 16),
+                      tokens_per_media_item=64).profile(ds)
+    res = eng.plan(gbs=512)
+    assert res.found
+    assert res.elapsed_s < 5.0          # CPU-container headroom; paper: <0.2s
+
+
+def test_expected_objective_prefers_balanced_under_variance():
+    eng = _engine()
+    eng.objective = "expected"
+    res = eng.plan(gbs=64)
+    assert res.found

@@ -1,0 +1,44 @@
+"""Sequence packing tests (paper §3.2.1)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.data.items import DataItem
+from repro.data.packing import greedy_bin_pack, pack_tokens
+
+
+def test_pack_tokens_labels_and_segments():
+    seqs = [np.arange(1, 6), np.arange(10, 14)]
+    pb = pack_tokens(seqs, budget=16)
+    t, lab, seg = pb.tokens[0], pb.labels[0], pb.segment_ids[0]
+    assert list(t[:5]) == [1, 2, 3, 4, 5]
+    assert list(lab[:4]) == [2, 3, 4, 5]       # next-token within segment
+    assert lab[4] == -1                         # no label across boundary
+    assert list(seg[:5]) == [1] * 5
+    assert list(seg[5:9]) == [2] * 4
+    assert all(seg[9:] == 0)                    # padding segment 0
+    assert all(lab[9:] == -1)
+
+
+def test_pack_tokens_truncates_at_budget():
+    pb = pack_tokens([np.arange(100)], budget=16)
+    assert pb.used == 16
+    assert pb.n_items == 1
+
+
+@given(st.lists(st.integers(1, 50), min_size=1, max_size=40),
+       st.integers(8, 64))
+@settings(max_examples=100, deadline=None)
+def test_greedy_bin_pack_properties(lengths, budget):
+    bins = greedy_bin_pack(lengths, budget)
+    flat = sorted(i for b in bins for i in b)
+    assert flat == list(range(len(lengths)))
+    for b in bins:
+        total = sum(min(lengths[i], budget) for i in b)
+        assert total <= budget
+
+
+def test_positions_restart_per_segment():
+    pb = pack_tokens([np.arange(4), np.arange(3)], budget=12)
+    pos = pb.positions[0]
+    assert list(pos[:4]) == [0, 1, 2, 3]
+    assert list(pos[4:7]) == [0, 1, 2]

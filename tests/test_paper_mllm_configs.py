@@ -1,0 +1,48 @@
+"""The paper's own MLLM configs (Table 3 + Fig. 9) instantiate and train."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, list_archs
+from repro.models import mllm as mllm_lib
+from repro.models.model import FwdCtx
+
+PAPER_MLLMS = ["llava-ov-qwen7b", "llava-ov-llama8b", "qwen2-audio-7b"]
+
+
+def test_paper_mllms_registered():
+    archs = list_archs()
+    for a in PAPER_MLLMS:
+        assert a in archs
+
+
+@pytest.mark.parametrize("arch", PAPER_MLLMS)
+def test_reduced_paper_mllm_forward(arch):
+    spec = get_config(arch)
+    desc = spec.reduced_desc()
+    params = mllm_lib.init(jax.random.PRNGKey(0), desc)
+    B, Tm, Tt = 2, 12, 16
+    rng = np.random.default_rng(0)
+    batch = {
+        "media_embeds": jnp.asarray(
+            rng.standard_normal((B, Tm, desc.stub.embed_dim)), jnp.float32),
+        "media_mask": jnp.ones((B, Tm), jnp.int32),
+        "text_tokens": jnp.asarray(
+            rng.integers(1, desc.llm.vocab_size, (B, Tt)), jnp.int32),
+        "text_mask": jnp.ones((B, Tt), jnp.int32),
+    }
+    logits, aux = mllm_lib.forward_train(
+        params, desc, batch, ctx=FwdCtx(mode="train", attn_impl="naive"))
+    assert logits.shape == (B, Tt, desc.llm.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+@pytest.mark.parametrize("arch", PAPER_MLLMS)
+def test_paper_mllm_param_scale(arch):
+    """Full configs land near their nameplate sizes."""
+    spec = get_config(arch)
+    n = spec.desc.param_count() / 1e9
+    expected = {"llava-ov-qwen7b": 8.0, "llava-ov-llama8b": 8.5,
+                "qwen2-audio-7b": 8.3}[arch]
+    assert abs(n - expected) / expected < 0.15, n

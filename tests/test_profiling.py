@@ -1,0 +1,109 @@
+"""Profiling Engine tests (paper §3.2): interpolation + data profiler."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.common.types import ModelConfig
+from repro.core.profiling.analytic import AnalyticBackend, V5E
+from repro.core.profiling.data_profiler import DataProfiler
+from repro.core.profiling.flops import module_flops
+from repro.core.profiling.interpolation import GridInterpolator
+from repro.core.profiling.model_profiler import ModelProfiler
+from repro.data.items import DataItem
+from repro.data.synthetic import MixedDataset
+
+
+def test_interpolator_exact_on_grid():
+    ax = [np.array([1.0, 2.0, 4.0]), np.array([1.0, 8.0])]
+    vals = np.arange(6, dtype=float).reshape(3, 2)
+    g = GridInterpolator(ax, vals)
+    for i, a in enumerate(ax[0]):
+        for j, b in enumerate(ax[1]):
+            np.testing.assert_allclose(g(a, b), vals[i, j])
+
+
+def test_interpolator_linear_between_points():
+    g = GridInterpolator([np.array([0.0, 10.0])], np.array([0.0, 100.0]))
+    np.testing.assert_allclose(g(2.5), 25.0)
+
+
+@given(st.floats(-100, 1000))
+@settings(max_examples=100, deadline=None)
+def test_interpolator_clamped_extrapolation(x):
+    g = GridInterpolator([np.array([1.0, 2.0, 3.0])],
+                         np.array([5.0, 7.0, 6.0]))
+    v = g(x)
+    assert 5.0 - 1e-9 <= v <= 7.0 + 1e-9
+
+
+@given(st.lists(st.tuples(st.floats(0, 50), st.floats(0, 50)),
+                min_size=2, max_size=6, unique_by=lambda t: t[0]))
+@settings(max_examples=50, deadline=None)
+def test_interpolator_within_hull(pts):
+    pts = sorted(pts)
+    xs = np.array([p[0] for p in pts])
+    if np.any(np.diff(xs) <= 0):
+        return
+    ys = np.array([p[1] for p in pts])
+    g = GridInterpolator([xs], ys)
+    q = (xs[0] + xs[-1]) / 2
+    assert ys.min() - 1e-6 <= g(q) <= ys.max() + 1e-6
+
+
+def test_flops_split_attention_vs_linear():
+    """Attention FLOPs scale ~quadratically with seq, linear FLOPs
+    linearly — the distinction §3.2.1 profiles separately."""
+    cfg = ModelConfig(name="t", family="dense", n_layers=2, d_model=256,
+                      n_heads=4, n_kv_heads=4, d_ff=1024, vocab_size=1000)
+    f1 = module_flops(cfg, 1, 1024)
+    f2 = module_flops(cfg, 1, 2048)
+    assert 3.5 < f2.attn / f1.attn < 4.5          # ~s^2
+    assert 1.9 < f2.lin / f1.lin < 2.1            # ~s
+
+
+def test_profiler_duration_monotone_in_shape():
+    cfg = ModelConfig(name="t", family="dense", n_layers=4, d_model=512,
+                      n_heads=8, n_kv_heads=8, d_ff=2048, vocab_size=32000)
+    prof = ModelProfiler(AnalyticBackend(V5E))
+    mp = prof.profile_llm(cfg)
+    durs = [mp.duration(1, s, 4) for s in (512, 1024, 4096, 16384)]
+    assert all(a < b for a, b in zip(durs, durs[1:]))
+
+
+def test_fig2_effect_tp_efficiency_drops_at_small_shapes():
+    """The paper's Fig. 2: per-chip efficiency at tp=16 is worse for small
+    effective batches than large ones."""
+    enc = ModelConfig(name="e", family="vlm-enc", n_layers=12, d_model=768,
+                      n_heads=12, n_kv_heads=12, d_ff=3072, vocab_size=0,
+                      causal=False, has_lm_head=False)
+    b = AnalyticBackend(V5E)
+    eff = {bs: b.throughput(enc, bs, 729, 16) / 16 /
+           b.throughput(enc, bs, 729, 1) for bs in (1, 64)}
+    assert eff[1] < eff[64] + 1e-9
+
+
+def test_data_profiler_shapes_and_mean():
+    items = [DataItem(2, 100), DataItem(4, 300)]
+    dp = DataProfiler(tokens_per_media_item=10)
+    dist = dp.profile(items)
+    np.testing.assert_allclose(dist.mean(), (3.0, (120 + 340) / 2))
+
+
+def test_data_profiler_architecture_dependence():
+    """Same dataset, different connector budgets -> different distributions
+    (§3.2.2's point)."""
+    ds = MixedDataset("mixed", seed=0)
+    d1 = DataProfiler(49).profile_sampler(ds, 512)
+    ds2 = MixedDataset("mixed", seed=0)
+    d2 = DataProfiler(196).profile_sampler(ds2, 512)
+    assert d2.mean()[1] > d1.mean()[1]
+
+
+def test_mixture_heterogeneity_ordering():
+    """Fig. 11b: mixed/video datasets are more heterogeneous than
+    multi-image."""
+    cvs = {}
+    for mix in ("multi_image", "video", "mixed"):
+        ds = MixedDataset(mix, seed=1)
+        cvs[mix] = DataProfiler(196).profile_sampler(ds, 2048).heterogeneity()
+    assert cvs["mixed"] > cvs["multi_image"]

@@ -1,0 +1,99 @@
+"""Online Microbatch Scheduler: unit + property tests (paper §3.4)."""
+import itertools
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.scheduler.ilp import solve_makespan_bnb
+from repro.core.scheduler.lpt import cmax, lower_bound, lpt_schedule
+
+durations = st.lists(
+    st.tuples(st.floats(0.0, 10.0), st.floats(0.0, 10.0)),
+    min_size=1, max_size=24)
+
+
+def _split(pairs):
+    e = np.array([p[0] for p in pairs])
+    l = np.array([p[1] for p in pairs])
+    return e, l
+
+
+@given(durations, st.integers(1, 6))
+@settings(max_examples=200, deadline=None)
+def test_lpt_partition_invariants(pairs, m):
+    e, l = _split(pairs)
+    groups = lpt_schedule(e, l, m)
+    # every item assigned exactly once
+    flat = sorted(i for g in groups for i in g)
+    assert flat == list(range(len(e)))
+    # objective within Graham-style bound of the lower bound
+    assert cmax(e, l, groups) <= 2.0 * lower_bound(e, l, m) + 1e-9
+
+
+@given(durations, st.integers(1, 4))
+@settings(max_examples=60, deadline=None)
+def test_bnb_no_worse_than_lpt(pairs, m):
+    e, l = _split(pairs)
+    res = solve_makespan_bnb(e, l, m, time_limit_s=0.2)
+    flat = sorted(i for g in res.groups for i in g)
+    assert flat == list(range(len(e)))
+    assert res.cmax <= cmax(e, l, lpt_schedule(e, l, m)) + 1e-9
+    assert res.cmax >= lower_bound(e, l, m) - 1e-9
+
+
+def _brute_force(e, l, m):
+    n = len(e)
+    best = float("inf")
+    for assign in itertools.product(range(m), repeat=n):
+        ge = np.zeros(m)
+        gl = np.zeros(m)
+        for i, b in enumerate(assign):
+            ge[b] += e[i]
+            gl[b] += l[i]
+        best = min(best, max(ge.max(), gl.max()))
+    return best
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_bnb_optimal_small(seed):
+    rng = np.random.default_rng(seed)
+    n, m = 7, 3
+    e = rng.uniform(0, 1, n)
+    l = rng.uniform(0, 2, n)
+    res = solve_makespan_bnb(e, l, m, time_limit_s=5.0)
+    assert res.optimal
+    np.testing.assert_allclose(res.cmax, _brute_force(e, l, m), rtol=1e-9)
+
+
+def test_imbalance_below_one_percent_at_large_gbs():
+    """Fig. 16b claim: at GBS 2048 the hybrid solver stays within 1% of the
+    load lower bound."""
+    rng = np.random.default_rng(0)
+    gbs, m = 2048, 32
+    e = rng.lognormal(0, 1, gbs) * 0.01
+    l = rng.lognormal(0.5, 0.8, gbs) * 0.02
+    res = solve_makespan_bnb(e, l, m, time_limit_s=0.5)
+    lb = lower_bound(e, l, m)
+    assert res.cmax / lb - 1.0 < 0.01
+
+
+def test_scheduler_beats_random_on_heterogeneous_items():
+    from repro.core.engine import DFLOPEngine
+    from repro.core.optimizer.space import (ClusterSpec, ModuleParallelism,
+                                            ParallelismPlan)
+    from repro.data.synthetic import MixedDataset
+    from repro.common.types import ModelConfig
+
+    cfg = ModelConfig(name="t", family="dense", n_layers=4, d_model=256,
+                      n_heads=4, n_kv_heads=4, d_ff=512, vocab_size=1024)
+    ds = MixedDataset("mixed", seed=0, tokens_per_media_item=32)
+    eng = DFLOPEngine(llm_cfg=cfg, cluster=ClusterSpec(16, 16),
+                      tokens_per_media_item=32).profile(ds)
+    plan = ParallelismPlan(llm=ModuleParallelism(1, 1, 2), n_mb=4)
+    sched = eng.scheduler(plan=plan, adaptive=False, ilp_time_limit_s=0.1)
+    items = ds.sample(64)
+    balanced = sched.schedule(items)
+    random = sched.schedule_random(items)
+    assert balanced.cmax <= random.cmax
+    assert balanced.imbalance < 0.05

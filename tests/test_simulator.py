@@ -1,0 +1,63 @@
+"""1F1B pipeline simulator tests (paper Fig. 1 / §5.3.5)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.pipeline.simulator import (ideal_bubble_fraction,
+                                           simulate_1f1b)
+
+
+def test_homogeneous_makespan_formula():
+    for p, m, f in [(2, 4, 1.0), (4, 6, 0.5), (8, 8, 2.0)]:
+        tr = simulate_1f1b(np.full((p, m), f))
+        np.testing.assert_allclose(tr.makespan, (m + p - 1) * 3 * f)
+        np.testing.assert_allclose(tr.idle_fraction,
+                                   ideal_bubble_fraction(p, m))
+
+
+dur_matrix = st.integers(1, 5).flatmap(
+    lambda p: st.integers(1, 8).flatmap(
+        lambda m: st.lists(
+            st.lists(st.floats(0.01, 5.0), min_size=m, max_size=m),
+            min_size=p, max_size=p)))
+
+
+@given(dur_matrix)
+@settings(max_examples=100, deadline=None)
+def test_1f1b_invariants(rows):
+    fwd = np.array(rows)
+    p, m = fwd.shape
+    tr = simulate_1f1b(fwd)
+    # makespan bounded below by any stage's busy time and by the
+    # fwd+bwd critical path of any microbatch
+    assert tr.makespan >= tr.stage_busy.max() - 1e-9
+    crit = fwd.sum(axis=0) + 2 * fwd.sum(axis=0)
+    assert tr.makespan >= crit.max() - 1e-9
+    # ops on one stage never overlap
+    per_stage = {}
+    for kind, s, i, t0, t1 in tr.ops:
+        per_stage.setdefault(s, []).append((t0, t1))
+    for s, spans in per_stage.items():
+        spans.sort()
+        for (a0, a1), (b0, b1) in zip(spans, spans[1:]):
+            assert b0 >= a1 - 1e-9
+    # dependency: F[s,i] starts after F[s-1,i] ends
+    f_end = {}
+    for kind, s, i, t0, t1 in tr.ops:
+        if kind == "F":
+            f_end[(s, i)] = t1
+    for (s, i), t1 in f_end.items():
+        if s > 0:
+            assert t1 >= f_end[(s - 1, i)] - 1e-9
+
+
+def test_heterogeneity_hurts_bubble():
+    """The real case of Fig. 1: variable microbatch durations create more
+    idle time than the homogeneous ideal."""
+    rng = np.random.default_rng(0)
+    p, m = 4, 8
+    mean = 1.0
+    uniform = simulate_1f1b(np.full((p, m), mean))
+    skewed = rng.lognormal(0, 0.8, (p, m))
+    skewed *= mean / skewed.mean()
+    het = simulate_1f1b(skewed)
+    assert het.idle_fraction > uniform.idle_fraction

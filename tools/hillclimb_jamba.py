@@ -1,0 +1,49 @@
+"""Hillclimb jamba-v0.1-52b x train_4k: measure roofline terms per variant."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import sys, dataclasses, json
+import jax
+from repro.configs import get_config
+from repro.common.types import INPUT_SHAPES
+from repro.launch import dryrun as D
+from repro.launch.hlo_stats import analyze
+from repro.launch.mesh import make_production_mesh
+
+variant = sys.argv[1]
+spec = get_config("jamba-v0.1-52b")
+mesh = make_production_mesh()
+
+if variant == "nmb8":
+    D.N_MB["jamba-v0.1-52b"] = 8
+elif variant == "nmb32":
+    D.N_MB["jamba-v0.1-52b"] = 32
+elif variant == "no-expert-fsdp":
+    _orig = D.make_assignment
+    def make_assignment(mesh, spec, **kw):
+        ma = _orig(mesh, spec, **kw)
+        llm = dataclasses.replace(ma.llm, fsdp_exclude=(r"/moe/w_",))
+        return dataclasses.replace(ma, llm=llm)
+    D.make_assignment = make_assignment
+elif variant == "nmb8+no-expert-fsdp":
+    D.N_MB["jamba-v0.1-52b"] = 8
+    _orig = D.make_assignment
+    def make_assignment(mesh, spec, **kw):
+        ma = _orig(mesh, spec, **kw)
+        llm = dataclasses.replace(ma.llm, fsdp_exclude=(r"/moe/w_",))
+        return dataclasses.replace(ma, llm=llm)
+    D.make_assignment = make_assignment
+
+jitted, args, extra = D.build_train(spec, INPUT_SHAPES["train_4k"], mesh)
+with mesh:
+    co = jitted.lower(*args).compile()
+ma = co.memory_analysis()
+st = analyze(co.as_text())
+peak = (ma.argument_size_in_bytes + ma.output_size_in_bytes
+        + ma.temp_size_in_bytes - ma.alias_size_in_bytes)
+print(json.dumps({
+    "variant": variant,
+    "compute_s": st.flops / 197e12,
+    "memory_s": st.hbm_bytes / 819e9,
+    "collective_s": st.total_collective_bytes / 50e9,
+    "peak_gb": peak / 1e9,
+}))

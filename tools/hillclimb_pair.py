@@ -1,0 +1,63 @@
+"""Measure roofline terms for one (arch, shape) with optional overrides."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import sys, json, dataclasses
+import jax
+from repro.configs import get_config
+from repro.common.types import INPUT_SHAPES
+from repro.launch import dryrun as D
+from repro.launch.hlo_stats import analyze
+from repro.launch.mesh import make_production_mesh
+
+arch, shape, kind = sys.argv[1], sys.argv[2], sys.argv[3]
+overrides = dict(kv.split("=") for kv in sys.argv[4:])
+
+if "ssm_impl" in overrides or "attn_block" in overrides:
+    import repro.models.model as M
+    orig = M.FwdCtx
+    if "ssm_impl" in overrides:
+        # route rwkv to chunked via ctx.ssm_impl
+        pass
+if "attn_block" in overrides:
+    import repro.models.layers.attention as A
+    bq = int(overrides["attn_block"])
+    _orig_flash = A.flash_attention_xla
+    def flash(q, k, v, **kw):
+        kw["block_q"] = bq; kw["block_k"] = bq
+        return _orig_flash(q, k, v, **kw)
+    A.flash_attention_xla = flash
+if "ssm_impl" in overrides:
+    # patch the train ctx builder to use the chosen ssm impl
+    _bt = D.build_train
+    import repro.models.model as M
+    _orig_fwd = M.forward
+    val = overrides["ssm_impl"]
+    import functools
+    def fwd(params, cfg, **kw):
+        ctx = kw.get("ctx")
+        if ctx is not None:
+            ctx = dataclasses.replace(ctx, ssm_impl=val)
+            kw["ctx"] = ctx
+        return _orig_fwd(params, cfg, **kw)
+    M.forward = fwd
+if "n_mb" in overrides:
+    D.N_MB[arch] = int(overrides["n_mb"])
+
+spec = get_config(arch)
+mesh = make_production_mesh()
+builder = {"train": D.build_train, "prefill": D.build_prefill,
+           "decode": D.build_decode}[kind]
+jitted, args, extra = builder(spec, INPUT_SHAPES[shape], mesh)
+with mesh:
+    co = jitted.lower(*args).compile()
+ma = co.memory_analysis()
+st = analyze(co.as_text())
+peak = (ma.argument_size_in_bytes + ma.output_size_in_bytes
+        + ma.temp_size_in_bytes - ma.alias_size_in_bytes)
+print(json.dumps({
+    "arch": arch, "shape": shape, "overrides": overrides,
+    "compute_s": st.flops / 197e12,
+    "memory_s": st.hbm_bytes / 819e9,
+    "collective_s": st.total_collective_bytes / 50e9,
+    "peak_gb": peak / 1e9,
+}))

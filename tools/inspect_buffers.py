@@ -1,0 +1,36 @@
+"""Dump the largest HLO buffers for one dry-run combo (debugging aid)."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import sys
+import jax
+from repro.configs import get_config
+from repro.common.types import INPUT_SHAPES
+from repro.launch import dryrun as D
+from repro.launch.hlo_stats import parse_module, shape_bytes
+from repro.launch.mesh import make_production_mesh
+
+arch, shape, kind = sys.argv[1], sys.argv[2], sys.argv[3]
+spec = get_config(arch)
+mesh = make_production_mesh(multi_pod=(len(sys.argv) > 4))
+builder = {"train": D.build_train, "prefill": D.build_prefill, "decode": D.build_decode}[kind]
+jitted, args, extra = builder(spec, INPUT_SHAPES[shape], mesh)
+with mesh:
+    co = jitted.lower(*args).compile()
+ma = co.memory_analysis()
+print("arg GB:", ma.argument_size_in_bytes/1e9, "out:", ma.output_size_in_bytes/1e9,
+      "temp:", ma.temp_size_in_bytes/1e9, "alias:", ma.alias_size_in_bytes/1e9)
+comps, entry = parse_module(co.as_text())
+allops = []
+for c in comps.values():
+    for op in c.ops:
+        b = shape_bytes(op.shape)
+        if b > 100e6:
+            allops.append((b, c.name[:24], op.opcode, op.shape[:120]))
+allops.sort(reverse=True)
+seen = set()
+for b, cn, oc, sh in allops:
+    key = (oc, sh)
+    if key in seen: continue
+    seen.add(key)
+    print(f"{b/1e9:7.2f}GB {oc:18s} {cn:24s} {sh}")
+    if len(seen) > 14: break
