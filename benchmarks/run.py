@@ -36,6 +36,7 @@ def main() -> None:
         fig13_bubbles,
         fig14_stage_throughput,
         fig15_adaptive,
+        fig16_replan,
         roofline,
         tab4_overhead,
     )
@@ -52,6 +53,7 @@ def main() -> None:
         "fig13": fig13_bubbles,
         "fig14": fig14_stage_throughput,
         "fig15": fig15_adaptive,
+        "fig16": fig16_replan,
         "tab4": tab4_overhead,
         "roofline": roofline,
     }

@@ -2,7 +2,15 @@
 steps on synthetic mixed multimodal data, comparing the Online Microbatch
 Scheduler against random (data-agnostic) assignment.
 
+Scheduling runs through the `repro.runtime` control loop: every step's
+wall time feeds back into calibration + drift detection, and `--trace`
+exports a Chrome trace (load in https://ui.perfetto.dev) of the run.
+`--replan` additionally lets the controller re-plan in the background and
+hot-swap θ* when the data distribution drifts (here the plan is pinned
+tiny for single-host training, so swaps mainly demonstrate the mechanics).
+
     PYTHONPATH=src python examples/train_mllm.py [--steps 200] [--random]
+        [--trace runtime_trace.json] [--replan]
 """
 import argparse
 import time
@@ -38,9 +46,9 @@ MAX_MEDIA = 8 * 16       # encoder tokens cap
 MAX_TEXT = 384
 
 
-def build_batches(ds, sched, items, groups, n_mb):
+def build_batches(ds, plan, items, groups, n_mb):
     """Tensorize scheduler groups -> (n_mb, rows, ...) MLLM batch."""
-    dp = sched.plan.llm.dp
+    dp = plan.llm.dp
     rows = []
     for i in range(n_mb):
         row_items = []
@@ -64,6 +72,10 @@ def main():
     ap.add_argument("--random", action="store_true",
                     help="random (data-agnostic) microbatch assignment")
     ap.add_argument("--ckpt", default="")
+    ap.add_argument("--trace", default="",
+                    help="export a Chrome trace of the run to this path")
+    ap.add_argument("--replan", action="store_true",
+                    help="enable background re-planning on drift")
     args = ap.parse_args()
 
     ds = MixedDataset("mixed", seed=0, tokens_per_media_item=TPM)
@@ -73,7 +85,9 @@ def main():
     eng.profile(ds)
     plan = ParallelismPlan(llm=ModuleParallelism(1, 1, 1),
                            encoder=ModuleParallelism(1, 1, 1), n_mb=4)
-    sched = eng.scheduler(plan=plan, adaptive=True, ilp_time_limit_s=0.05)
+    ctl = eng.runtime(GBS, plan=plan, adaptive=True, ilp_time_limit_s=0.05,
+                      auto_replan=args.replan)
+    sched = ctl.scheduler
 
     params = mllm_lib.init(jax.random.PRNGKey(0), MCFG)
     opt = adamw_init(params)
@@ -89,19 +103,30 @@ def main():
     for k in range(args.steps):
         items = ds.sample(GBS)
         out = (sched.schedule_random(items, seed=k) if args.random
-               else sched.schedule(items))
+               else ctl.schedule(items))
         pred_cmax.append(out.cmax)
-        batch = build_batches(ds, sched, items, out.groups, plan.n_mb)
+        batch = build_batches(ds, out.plan, items, out.groups, out.plan.n_mb)
+        ts = time.time()
         params, opt, m = step(params, opt, batch, lr_fn(k))
+        m["loss"].block_until_ready()
+        ctl.observe_step(out, time.time() - ts)
         losses.append(float(m["loss"]))
         if k % 25 == 0:
             print(f"step {k:4d}  loss={losses[-1]:.3f}  "
                   f"pred C_max={out.cmax:.4f}s  solver={out.solver}")
     dt = time.time() - t0
     mode = "random" if args.random else "dflop"
+    snap = ctl.metrics.snapshot()
     print(f"[{mode}] {args.steps} steps in {dt:.1f}s; "
           f"loss {losses[0]:.3f} -> {np.mean(losses[-10:]):.3f}; "
           f"mean predicted C_max {np.mean(pred_cmax):.4f}s")
+    print(f"[runtime] imbalance={snap['imbalance_mean']:.4f}  "
+          f"sched_overhead={snap['sched_elapsed_mean_s'] * 1e3:.2f}ms  "
+          f"drift_events={snap['n_drift_events']}  "
+          f"replans={snap['n_replans']}")
+    if args.trace:
+        print(f"chrome trace written to {ctl.export_trace(args.trace)}")
+    ctl.close()
     if args.ckpt:
         checkpoint.save(args.ckpt, params, {"steps": args.steps,
                                             "loss": losses[-1]})

@@ -8,6 +8,9 @@ Package layout:
   repro.core      — the paper's contribution (profiling engine, data-aware
                     3D parallelism optimizer, online microbatch scheduler,
                     pipeline executor/simulator, inter-model communicator)
+  repro.runtime   — telemetry & continuous re-planning: trace recorder,
+                    rolling metrics, online calibration, drift detection,
+                    RuntimeController (background re-plan + plan hot-swap)
   repro.models    — pure-functional JAX model substrate (dense / MoE / SSM /
                     hybrid / encoder / VLM families)
   repro.kernels   — Pallas TPU kernels (packed flash attention, RWKV6 scan,

@@ -1,0 +1,21 @@
+"""JAX version compatibility shims.
+
+The codebase targets the current `jax.shard_map` / `jax.sharding.AxisType`
+API; older releases (e.g. 0.4.x) expose shard_map only under
+`jax.experimental.shard_map` and have no AxisType.  Route through these
+helpers instead of feature-detecting at every call site.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, **kw):
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    if "check_vma" in kw:                   # renamed from check_rep
+        kw["check_rep"] = kw.pop("check_vma")
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kw)

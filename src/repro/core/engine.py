@@ -6,6 +6,14 @@
     sched = engine.scheduler()               # Online Scheduler (§3.4)
     for batch_items in loader:
         out = sched.schedule(batch_items)    # index groups -> data loader
+
+Closed-loop operation (repro.runtime) adds observe → re-plan on top:
+
+    ctl = engine.runtime(gbs)                # RuntimeController
+    for batch_items in loader:
+        out = ctl.schedule(batch_items)      # drift-checked, hot-swappable
+        ...run step, measure...
+        ctl.observe_step(out, measured_s)    # telemetry + drift feedback
 """
 from __future__ import annotations
 
@@ -85,3 +93,28 @@ class DFLOPEngine:
         return OnlineMicrobatchScheduler(
             plan, self.perf, self.tokens_per_media_item,
             ilp_time_limit_s=ilp_time_limit_s, adaptive=corr, mode=self.mode)
+
+    # ------------------------------------------------------------------ #
+    def runtime(self, gbs: int, *, plan: Optional[ParallelismPlan] = None,
+                adaptive: bool = True, calibrate: bool = True,
+                trace: bool = True, drift=None, auto_replan: bool = True,
+                min_improvement: float = 0.02,
+                ilp_time_limit_s: float = 0.25):
+        """Closed control loop: returns a `repro.runtime.RuntimeController`
+        wrapping this engine + a fresh scheduler.  Plans first if needed."""
+        from repro.runtime import (DriftDetector, OnlineCalibrator,
+                                   RuntimeController, RuntimeMetrics,
+                                   TraceRecorder)
+        if plan is None:
+            if self.plan_result is None or self.plan_result.plan is None:
+                self.plan(gbs)
+            plan = self.plan_result.plan
+        sched = self.scheduler(plan=plan, adaptive=adaptive,
+                               ilp_time_limit_s=ilp_time_limit_s)
+        return RuntimeController(
+            self, sched, gbs,
+            trace=TraceRecorder(enabled=trace),
+            metrics=RuntimeMetrics(),
+            calibration=OnlineCalibrator() if calibrate else None,
+            drift=drift if drift is not None else DriftDetector(),
+            auto_replan=auto_replan, min_improvement=min_improvement)

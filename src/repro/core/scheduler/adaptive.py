@@ -27,17 +27,27 @@ class _BucketStats:
 class AdaptiveCorrection:
     def __init__(self, *, monitoring_cost: float = 0.04,
                  window: int = 64, min_obs: int = 3,
-                 deviation_threshold: float = 0.05):
+                 deviation_threshold: float = 0.05,
+                 probe_interval: int = 512, probe_window: int = 16):
         """monitoring_cost: recurring relative overhead C of tracking
-        (paper measures ~4%); window: iterations I for the benefit average."""
+        (paper measures ~4%); window: iterations I for the benefit average;
+        probe_interval/probe_window: while deactivated, every
+        `probe_interval` observations a `probe_window`-long probe re-runs
+        the cost-benefit test so the mechanism recovers when deviations
+        return (the paper's loop is continuous, not one-way)."""
         self.cost = monitoring_cost
         self.window = window
         self.min_obs = min_obs
         self.threshold = deviation_threshold
+        self.probe_interval = probe_interval
+        self.probe_window = probe_window
         self.enabled = True
+        self.probing = False
         self.stats: Dict[Tuple[str, int], _BucketStats] = defaultdict(_BucketStats)
         self.benefits: Deque[float] = deque(maxlen=window)
         self._iters = 0
+        self._disabled_iters = 0
+        self._probe_seen = 0
 
     # ------------------------------------------------------------------ #
     @staticmethod
@@ -50,8 +60,20 @@ class AdaptiveCorrection:
         """Record one execution. Durations are interchangeable with inverse
         throughputs for a fixed workload: B = Th_act − Th_pred ∝
         pred_dur/act_dur − 1."""
-        if not self.enabled or predicted_dur <= 0 or actual_dur <= 0:
+        if predicted_dur <= 0 or actual_dur <= 0:
             return
+        if not self.enabled:
+            # Deactivated: only count iterations (near-zero cost) until the
+            # next probe window opens.
+            self._disabled_iters += 1
+            if self._disabled_iters >= self.probe_interval:
+                self.enabled = True
+                self.probing = True
+                self._probe_seen = 0
+                self._disabled_iters = 0
+                self.benefits.clear()
+            else:
+                return
         key = (module, self.bucket(shape))
         st = self.stats[key]
         st.n += 1
@@ -59,14 +81,30 @@ class AdaptiveCorrection:
         # relative benefit of having the corrected estimate for this shape
         self.benefits.append(abs(actual_dur / predicted_dur - 1.0))
         self._iters += 1
-        self._maybe_toggle()
+        if self.probing:
+            self._probe_seen += 1
+            if self._probe_seen >= self.probe_window:
+                self.probing = False
+                avg_b = sum(self.benefits) / len(self.benefits)
+                if avg_b < self.cost:
+                    self._deactivate()
+                else:
+                    self._iters = 0          # fresh full window before the
+                                             # next cost-benefit re-check
+        else:
+            self._maybe_toggle()
+
+    def _deactivate(self) -> None:
+        self.enabled = False
+        self.probing = False
+        self._disabled_iters = 0
 
     def _maybe_toggle(self) -> None:
         if self._iters >= self.window and len(self.benefits) == self.benefits.maxlen:
             avg_b = sum(self.benefits) / len(self.benefits)
             if avg_b < self.cost:
                 # benefit does not justify monitoring overhead: deactivate
-                self.enabled = False
+                self._deactivate()
 
     # ------------------------------------------------------------------ #
     def correct(self, module: str, shape: float, predicted_dur: float) -> float:

@@ -33,11 +33,20 @@ class ScheduleOutput:
     elapsed_s: float
     e_dur: np.ndarray
     l_dur: np.ndarray
+    plan: Optional[ParallelismPlan] = None   # plan θ this batch was balanced for
 
     @property
     def imbalance(self) -> float:
         """Relative gap to the load lower bound (<1% at GBS 2048, Fig. 16b)."""
         return self.cmax / max(self.lower_bound, 1e-12) - 1.0
+
+    @property
+    def step_makespan(self) -> float:
+        """Pipeline-makespan estimate (N_mb + depth − 1) · cmax — comparable
+        across plans with different bucket counts, unlike raw cmax."""
+        if self.plan is None:
+            return self.cmax
+        return (self.plan.n_mb + self.plan.pipeline_depth - 1) * self.cmax
 
 
 class OnlineMicrobatchScheduler:
@@ -45,12 +54,17 @@ class OnlineMicrobatchScheduler:
                  tokens_per_media_item: int, *,
                  ilp_time_limit_s: float = 0.25,
                  adaptive: Optional[AdaptiveCorrection] = None,
+                 calibration=None,
                  mode: str = "train"):
+        """calibration: optional duck-typed refiner with
+        ``correct(module, shape, tp, predicted)`` / ``observe(module, shape,
+        tp, predicted, actual)`` (see repro.runtime.calibration)."""
         self.plan = plan
         self.perf = perf
         self.tpm = tokens_per_media_item
         self.ilp_time_limit_s = ilp_time_limit_s
         self.adaptive = adaptive
+        self.calibration = calibration
         self.mode = mode
         self._pool = concurrent.futures.ThreadPoolExecutor(max_workers=1)
         self._pending: Optional[concurrent.futures.Future] = None
@@ -60,9 +74,17 @@ class OnlineMicrobatchScheduler:
     def n_buckets(self) -> int:
         return self.plan.n_mb * self.plan.llm.dp
 
-    def item_durations(self, items: Sequence[DataItem]) -> tuple[np.ndarray, np.ndarray]:
+    def set_plan(self, plan: ParallelismPlan) -> None:
+        """Hot-swap the active plan θ*.  Takes effect on the next
+        `schedule()` call — in-flight work keeps the plan it was scheduled
+        under (each call captures `self.plan` once on entry)."""
+        self.plan = plan
+
+    def item_durations(self, items: Sequence[DataItem],
+                       plan: Optional[ParallelismPlan] = None) -> tuple[np.ndarray, np.ndarray]:
         """Predicted per-item stage durations under θ* (§3.4.2 step 1)."""
-        ep, lp = self.plan.encoder, self.plan.llm
+        plan = plan if plan is not None else self.plan
+        ep, lp = plan.encoder, plan.llm
         e_dur = np.zeros(len(items))
         l_dur = np.zeros(len(items))
         for i, it in enumerate(items):
@@ -72,18 +94,23 @@ class OnlineMicrobatchScheduler:
                 d = self.perf.e_dur(b, ep.tp, self.mode) / max(ep.pp, 1)
                 if self.adaptive is not None:
                     d = self.adaptive.correct("encoder", b, d)
+                if self.calibration is not None:
+                    d = self.calibration.correct("encoder", b, ep.tp, d)
                 e_dur[i] = d
             d = self.perf.l_dur(s, lp.tp, self.mode) / max(lp.pp, 1)
             if self.adaptive is not None:
                 d = self.adaptive.correct("llm", s, d)
+            if self.calibration is not None:
+                d = self.calibration.correct("llm", s, lp.tp, d)
             l_dur[i] = d
         return e_dur, l_dur
 
     # ------------------------------------------------------------------ #
     def schedule(self, items: Sequence[DataItem]) -> ScheduleOutput:
         t0 = time.monotonic()
-        e_dur, l_dur = self.item_durations(items)
-        m = self.n_buckets
+        plan = self.plan                 # capture once: hot-swap safe
+        e_dur, l_dur = self.item_durations(items, plan)
+        m = plan.n_mb * plan.llm.dp
         res = solve_makespan_bnb(e_dur, l_dur, m,
                                  time_limit_s=self.ilp_time_limit_s)
         if res.timed_out:
@@ -94,15 +121,16 @@ class OnlineMicrobatchScheduler:
             solver = "ilp"
         lb = lower_bound(e_dur, l_dur, m)
         return ScheduleOutput(res.groups, res.cmax, lb, solver,
-                              time.monotonic() - t0, e_dur, l_dur)
+                              time.monotonic() - t0, e_dur, l_dur, plan)
 
     def schedule_random(self, items: Sequence[DataItem],
                         seed: int = 0) -> ScheduleOutput:
         """Data-agnostic baseline: random assignment (what PyTorch/Megatron
         loaders do) — used in Fig. 4/13 comparisons."""
         t0 = time.monotonic()
-        e_dur, l_dur = self.item_durations(items)
-        m = self.n_buckets
+        plan = self.plan
+        e_dur, l_dur = self.item_durations(items, plan)
+        m = plan.n_mb * plan.llm.dp
         rng = np.random.default_rng(seed)
         perm = rng.permutation(len(items))
         groups: List[List[int]] = [[] for _ in range(m)]
@@ -110,11 +138,15 @@ class OnlineMicrobatchScheduler:
             groups[pos % m].append(int(i))
         return ScheduleOutput(groups, cmax(e_dur, l_dur, groups),
                               lower_bound(e_dur, l_dur, m), "random",
-                              time.monotonic() - t0, e_dur, l_dur)
+                              time.monotonic() - t0, e_dur, l_dur, plan)
 
     # ------------------------------------------------------------------ #
     # Asynchronous operation: schedule batch t+1 while step t runs.
     def submit(self, items: Sequence[DataItem]) -> None:
+        if self._pending is not None:
+            raise RuntimeError(
+                "submit() called with a schedule still pending; "
+                "collect() the previous batch first")
         self._pending = self._pool.submit(self.schedule, list(items))
 
     def collect(self) -> Optional[ScheduleOutput]:
@@ -124,9 +156,29 @@ class OnlineMicrobatchScheduler:
         self._pending = None
         return out
 
+    @property
+    def has_pending(self) -> bool:
+        return self._pending is not None
+
     # ------------------------------------------------------------------ #
     def observe(self, module: str, shape: float, predicted: float,
-                actual: float) -> None:
-        """Runtime feedback for Adaptive Correction."""
+                actual: float,
+                plan: Optional[ParallelismPlan] = None) -> None:
+        """Runtime feedback for Adaptive Correction + online calibration.
+
+        `plan`: the plan the measured batch was scheduled under (defaults to
+        the current one) — after a hot-swap, pass `ScheduleOutput.plan` so
+        calibration keys the measurement to the TP degree it ran at.
+        The calibrator observes the residual left *after* adaptive
+        correction, mirroring the order item_durations() applies them —
+        otherwise both learn the same ratio and compound to its square."""
+        adjusted = predicted
         if self.adaptive is not None:
             self.adaptive.observe(module, shape, predicted, actual)
+            adjusted = self.adaptive.correct(module, shape, predicted)
+        if self.calibration is not None:
+            plan = plan if plan is not None else self.plan
+            mp = plan.encoder if module == "encoder" else plan.llm
+            if mp is not None:
+                self.calibration.observe(module, shape, mp.tp, adjusted,
+                                         actual)

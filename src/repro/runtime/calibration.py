@@ -1,0 +1,80 @@
+"""Online per-(module, shape-bucket, tp) duration calibration.
+
+`AdaptiveCorrection` (§3.4.3) applies a flat multiplicative penalty per
+shape bucket, averaged over the whole run.  This module keeps an EWMA of
+the observed/predicted duration ratio *per (module, shape bucket, TP
+degree)* instead, so the refinement (a) forgets stale kernels after a plan
+hot-swap changes TP, and (b) tracks slow residual drift that a lifetime
+average would smear.  It is duck-type compatible with the scheduler's
+corrector hook: ``correct(module, shape, tp, predicted) -> refined``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Tuple
+
+from repro.core.scheduler.adaptive import AdaptiveCorrection
+
+
+def shape_bucket(shape: float) -> int:
+    """Shared log2 bucketing — delegates to AdaptiveCorrection.bucket so the
+    two correctors can never bucket the same shape differently."""
+    return AdaptiveCorrection.bucket(shape)
+
+
+@dataclass
+class _Cell:
+    ratio: float = 1.0       # EWMA of actual/predicted
+    abs_err: float = 0.0     # EWMA of |actual/predicted − 1|
+    n: int = 0
+
+
+class OnlineCalibrator:
+    def __init__(self, *, alpha: float = 0.25, min_obs: int = 2,
+                 max_ratio: float = 8.0, deadband: float = 0.02):
+        """alpha: EWMA smoothing; min_obs: observations before a cell's
+        correction is trusted; max_ratio: clip for outlier measurements;
+        deadband: corrections within ±deadband of 1 are not applied."""
+        self.alpha = alpha
+        self.min_obs = min_obs
+        self.max_ratio = max_ratio
+        self.deadband = deadband
+        self.cells: Dict[Tuple[str, int, int], _Cell] = {}
+
+    # ------------------------------------------------------------------ #
+    def observe(self, module: str, shape: float, tp: int,
+                predicted: float, actual: float) -> None:
+        if predicted <= 0 or actual <= 0:
+            return
+        r = min(max(actual / predicted, 1.0 / self.max_ratio), self.max_ratio)
+        cell = self.cells.setdefault((module, shape_bucket(shape), int(tp)),
+                                     _Cell())
+        if cell.n == 0:
+            cell.ratio = r
+            cell.abs_err = abs(r - 1.0)
+        else:
+            a = self.alpha
+            cell.ratio += a * (r - cell.ratio)
+            cell.abs_err += a * (abs(r - 1.0) - cell.abs_err)
+        cell.n += 1
+
+    def correct(self, module: str, shape: float, tp: int,
+                predicted: float) -> float:
+        cell = self.cells.get((module, shape_bucket(shape), int(tp)))
+        if cell is None or cell.n < self.min_obs:
+            return predicted
+        if abs(cell.ratio - 1.0) < self.deadband:
+            return predicted
+        return predicted * cell.ratio
+
+    # ------------------------------------------------------------------ #
+    def residual(self, module: str | None = None) -> float:
+        """Mean EWMA |rel error| over mature cells (drift-detector input)."""
+        vals = [c.abs_err for (m, _, _), c in self.cells.items()
+                if c.n >= self.min_obs and (module is None or m == module)]
+        return sum(vals) / len(vals) if vals else 0.0
+
+    def snapshot(self) -> dict:
+        return {f"{m}/b{b}/tp{t}": {"ratio": c.ratio, "abs_err": c.abs_err,
+                                    "n": c.n}
+                for (m, b, t), c in sorted(self.cells.items())}

@@ -1,0 +1,245 @@
+"""RuntimeController: the closed profile → plan → schedule → observe →
+re-plan control loop.
+
+Wraps a `DFLOPEngine` and its `OnlineMicrobatchScheduler`:
+
+  * every global batch flows through ``schedule()``, which feeds the
+    observed shapes to the drift detector and the rolling metrics, and
+    records trace spans;
+  * measured durations come back through ``observe()`` /
+    ``observe_step()``, refining predictions via `OnlineCalibrator` (and
+    the paper's `AdaptiveCorrection`) and feeding residual drift;
+  * when drift fires, `ParallelismOptimizer.search()` re-runs in a
+    background thread over the *recent* shape window; the resulting plan
+    is hot-swapped between global batches iff its predicted makespan
+    beats the stale plan's by ``min_improvement``.
+
+The swap is deliberately confined to batch boundaries: `schedule()` polls
+the background future before scheduling, so in-flight microbatches always
+complete under the plan they were balanced for.
+"""
+from __future__ import annotations
+
+import concurrent.futures
+import threading
+from dataclasses import dataclass
+from typing import List, Optional, Sequence
+
+from repro.core.optimizer.makespan import expected_makespan, mean_makespan
+from repro.core.optimizer.search import ParallelismOptimizer, SearchResult
+from repro.core.profiling.data_profiler import ShapeDistribution
+from repro.core.scheduler.online import OnlineMicrobatchScheduler, ScheduleOutput
+from repro.data.items import DataItem
+from repro.runtime.calibration import OnlineCalibrator
+from repro.runtime.drift import DriftDetector, DriftEvent
+from repro.runtime.metrics import RuntimeMetrics
+from repro.runtime.trace import TraceRecorder
+
+
+@dataclass
+class ReplanRecord:
+    trigger: DriftEvent
+    stale_makespan: float       # current plan evaluated on the drifted dist
+    new_makespan: float         # best plan found by the background search
+    swapped: bool
+    search_elapsed_s: float
+    plan_tuple: Optional[tuple] = None
+
+
+class RuntimeController:
+    def __init__(self, engine, scheduler: OnlineMicrobatchScheduler,
+                 gbs: int, *,
+                 trace: Optional[TraceRecorder] = None,
+                 metrics: Optional[RuntimeMetrics] = None,
+                 calibration: Optional[OnlineCalibrator] = None,
+                 drift: Optional[DriftDetector] = None,
+                 auto_replan: bool = True,
+                 min_improvement: float = 0.02,
+                 replan_n_trials: int = 8):
+        self.engine = engine
+        self.scheduler = scheduler
+        self.gbs = gbs
+        self.trace = trace if trace is not None else TraceRecorder(enabled=False)
+        self.metrics = metrics if metrics is not None else RuntimeMetrics()
+        self.calibration = calibration
+        self.drift = drift if drift is not None else DriftDetector()
+        self.auto_replan = auto_replan
+        self.min_improvement = min_improvement
+        self.replan_n_trials = replan_n_trials
+        self.replans: List[ReplanRecord] = []
+        self.batch_idx = 0
+        if calibration is not None:
+            scheduler.calibration = calibration
+        if engine.dist is not None:
+            self.drift.set_reference(engine.dist)
+        self._pool = concurrent.futures.ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix="dflop-replan")
+        self._replan_future: Optional[concurrent.futures.Future] = None
+        self._lock = threading.Lock()
+        self.trace.name_thread(0, "control-loop")
+        self.trace.name_thread(1, "replan-search")
+
+    # ------------------------------------------------------------------ #
+    @property
+    def plan(self):
+        return self.scheduler.plan
+
+    def schedule(self, items: Sequence[DataItem]) -> ScheduleOutput:
+        """Schedule one global batch through the control loop."""
+        self.maybe_swap()                   # adopt a finished re-plan first
+        with self.trace.span("schedule", cat="scheduler",
+                             batch=self.batch_idx, n_items=len(items)):
+            out = self.scheduler.schedule(items)
+        self.metrics.record_schedule(out)
+        self.trace.counter("imbalance", out.imbalance)
+        self.trace.counter("pred_cmax_s", out.cmax)
+        ev = self.drift.observe_items(items, self.scheduler.tpm)
+        if ev is not None:
+            self._on_drift(ev)
+        self.batch_idx += 1
+        return out
+
+    # Pipelined variant mirroring the scheduler's submit/collect pair.
+    def submit(self, items: Sequence[DataItem]) -> None:
+        self.maybe_swap()
+        self.scheduler.submit(items)
+        ev = self.drift.observe_items(items, self.scheduler.tpm)
+        if ev is not None:
+            self._on_drift(ev)
+        self.batch_idx += 1
+
+    def collect(self) -> Optional[ScheduleOutput]:
+        out = self.scheduler.collect()
+        if out is not None:
+            self.metrics.record_schedule(out)
+            self.trace.counter("imbalance", out.imbalance)
+        return out
+
+    # ------------------------------------------------------------------ #
+    def observe(self, module: str, shape: float, predicted: float,
+                actual: float, plan=None) -> None:
+        """Per-(module, shape) measured duration feedback.  Pass the
+        producing `ScheduleOutput.plan` as `plan` so measurements taken
+        under a pre-swap plan are keyed to the TP they actually ran at."""
+        self.scheduler.observe(module, shape, predicted, actual, plan=plan)
+        self.metrics.record_prediction(module, predicted, actual)
+        if predicted > 0 and actual > 0:
+            ev = self.drift.observe_residual(abs(actual / predicted - 1.0))
+            if ev is not None:
+                self._on_drift(ev)
+
+    def observe_step(self, out: ScheduleOutput, measured_s: float, *,
+                     idle_s: float = 0.0, busy_s: float = 0.0,
+                     stage_busy=None) -> None:
+        """Whole-step feedback: wall time vs. the predicted makespan."""
+        self.trace.complete("step", self.trace.now_us() - measured_s * 1e6,
+                            measured_s * 1e6, cat="step",
+                            args={"pred_cmax_s": out.cmax})
+        self.metrics.record_step(measured_s, idle_s, busy_s or measured_s,
+                                 stage_busy)
+        self.trace.counter("bubble_fraction",
+                           self.metrics.bubble_fraction.last())
+        if out.cmax > 0 and measured_s > 0:
+            ev = self.drift.observe_residual(abs(measured_s / out.cmax - 1.0))
+            if ev is not None:
+                self._on_drift(ev)
+
+    # ------------------------------------------------------------------ #
+    def _on_drift(self, event: DriftEvent) -> None:
+        self.metrics.n_drift_events += 1
+        self.trace.instant(f"drift:{event.kind}", cat="drift",
+                           args={"statistic": event.statistic,
+                                 "n_obs": event.n_obs})
+        if not self.auto_replan:
+            return
+        with self._lock:
+            if self._replan_future is not None:
+                return                      # a search is already in flight
+            dist = self.drift.window_distribution()
+            if len(dist) == 0:
+                dist = self.engine.dist
+            self._replan_future = self._pool.submit(self._search, dist, event)
+
+    def _search(self, dist: ShapeDistribution, event: DriftEvent):
+        with self.trace.span("replan-search", cat="replan", tid=1,
+                             kind=event.kind):
+            opt = ParallelismOptimizer(self.engine.cluster, self.engine.perf,
+                                       mode=self.engine.mode,
+                                       objective=self.engine.objective,
+                                       n_trials=self.replan_n_trials)
+            res = opt.search(dist, self.gbs)
+        return event, dist, res
+
+    def _plan_makespan(self, plan, dist: ShapeDistribution) -> float:
+        """Evaluate a plan on `dist` under the engine's search objective, so
+        stale-vs-new comparisons are like-for-like with `res.makespan`."""
+        eng = self.engine
+        if eng.objective == "expected" and len(dist):
+            return expected_makespan(eng.perf, plan, dist, self.gbs,
+                                     n_trials=self.replan_n_trials,
+                                     mode=eng.mode)
+        mean_bsz, mean_seq = dist.mean() if len(dist) else (1.0, 1.0)
+        return mean_makespan(eng.perf, plan, mean_bsz, mean_seq, self.gbs,
+                             eng.mode)
+
+    def maybe_swap(self) -> bool:
+        """Adopt a finished background re-plan (batch-boundary only)."""
+        with self._lock:
+            fut = self._replan_future
+            if fut is None or not fut.done():
+                return False
+            self._replan_future = None
+        try:
+            event, dist, res = fut.result()
+        except Exception as e:  # noqa: BLE001 — a failed background search
+            # must not take down the training loop; the detector stays armed
+            # and the next drift event retries.
+            self.trace.instant("replan-error", cat="replan",
+                               args={"error": f"{type(e).__name__}: {e}"})
+            return False
+        stale = self._plan_makespan(self.scheduler.plan, dist)
+        swapped = (res.found
+                   and res.makespan < stale * (1.0 - self.min_improvement))
+        if swapped:
+            self.scheduler.set_plan(res.plan)
+            self.engine.plan_result = res
+            self.metrics.n_replans += 1
+            self.trace.instant("plan-swap", cat="replan",
+                               args={"stale_makespan_s": stale,
+                                     "new_makespan_s": res.makespan,
+                                     "plan": list(res.plan.as_tuple())})
+        # Re-arm against the drifted regime either way, otherwise the same
+        # shift keeps firing the detector every cooldown window.
+        self.drift.rebase(dist)
+        self.replans.append(ReplanRecord(
+            event, stale, res.makespan, swapped, res.elapsed_s,
+            res.plan.as_tuple() if res.found else None))
+        return swapped
+
+    def drain(self, timeout: Optional[float] = None) -> bool:
+        """Block until any in-flight search finishes, then try to swap.
+        Returns True if a swap happened (test/benchmark hook)."""
+        with self._lock:
+            fut = self._replan_future
+        if fut is not None:
+            concurrent.futures.wait([fut], timeout=timeout)
+        return self.maybe_swap()
+
+    @property
+    def replan_in_flight(self) -> bool:
+        with self._lock:
+            return self._replan_future is not None
+
+    # ------------------------------------------------------------------ #
+    def export_trace(self, path: str) -> str:
+        return self.trace.export(path)
+
+    def close(self) -> None:
+        self._pool.shutdown(wait=True)
+        self.maybe_swap()
+
+    def __enter__(self) -> "RuntimeController":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -1,0 +1,104 @@
+"""Rolling runtime counters for the control loop.
+
+Tracks, over a sliding window of recent global batches:
+  * scheduler imbalance   — ``ScheduleOutput.cmax / lower_bound − 1``
+  * bubble fraction       — pipeline idle / (idle + busy) per step
+  * per-stage utilization — stage busy time / step makespan
+  * prediction error      — |actual/predicted − 1| per module
+
+These are the observability half of the profile → plan → schedule →
+observe → re-plan loop: the controller reads them for re-plan decisions
+and mirrors them into the trace as counter tracks.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Deque, Dict, Optional
+
+import numpy as np
+
+
+class RollingStat:
+    """Bounded-window scalar stream with O(1) append."""
+
+    __slots__ = ("_buf", "count")
+
+    def __init__(self, window: int = 256):
+        self._buf: Deque[float] = deque(maxlen=window)
+        self.count = 0                     # lifetime observations
+
+    def add(self, x: float) -> None:
+        self._buf.append(float(x))
+        self.count += 1
+
+    def mean(self) -> float:
+        return float(np.mean(self._buf)) if self._buf else 0.0
+
+    def max(self) -> float:
+        return float(np.max(self._buf)) if self._buf else 0.0
+
+    def last(self) -> float:
+        return self._buf[-1] if self._buf else 0.0
+
+    def __len__(self) -> int:
+        return len(self._buf)
+
+
+class RuntimeMetrics:
+    def __init__(self, window: int = 256):
+        self.window = window
+        self.imbalance = RollingStat(window)
+        self.sched_elapsed_s = RollingStat(window)
+        self.pred_cmax_s = RollingStat(window)
+        self.bubble_fraction = RollingStat(window)
+        self.step_time_s = RollingStat(window)
+        self.stage_util: Dict[int, RollingStat] = {}
+        self.pred_error: Dict[str, RollingStat] = {}
+        self.n_schedules = 0
+        self.n_steps = 0
+        self.n_replans = 0
+        self.n_drift_events = 0
+
+    # ------------------------------------------------------------------ #
+    def record_schedule(self, out) -> None:
+        """`out`: a ScheduleOutput (duck-typed to avoid a core import)."""
+        self.imbalance.add(out.imbalance)
+        self.sched_elapsed_s.add(out.elapsed_s)
+        self.pred_cmax_s.add(out.cmax)
+        self.n_schedules += 1
+
+    def record_step(self, step_time_s: float, idle_s: float, busy_s: float,
+                    stage_busy: Optional[np.ndarray] = None) -> None:
+        self.step_time_s.add(step_time_s)
+        self.bubble_fraction.add(idle_s / max(idle_s + busy_s, 1e-12))
+        if stage_busy is not None and step_time_s > 0:
+            for p, b in enumerate(np.asarray(stage_busy, dtype=float)):
+                self.stage_util.setdefault(
+                    p, RollingStat(self.window)).add(b / step_time_s)
+        self.n_steps += 1
+
+    def record_prediction(self, module: str, predicted: float,
+                          actual: float) -> None:
+        if predicted <= 0 or actual <= 0:
+            return
+        self.pred_error.setdefault(
+            module, RollingStat(self.window)).add(abs(actual / predicted - 1.0))
+
+    # ------------------------------------------------------------------ #
+    def snapshot(self) -> dict:
+        return {
+            "n_schedules": self.n_schedules,
+            "n_steps": self.n_steps,
+            "n_replans": self.n_replans,
+            "n_drift_events": self.n_drift_events,
+            "imbalance_mean": self.imbalance.mean(),
+            "imbalance_last": self.imbalance.last(),
+            "sched_elapsed_mean_s": self.sched_elapsed_s.mean(),
+            "pred_cmax_mean_s": self.pred_cmax_s.mean(),
+            "bubble_fraction_mean": self.bubble_fraction.mean(),
+            "step_time_mean_s": self.step_time_s.mean(),
+            "stage_utilization": {p: s.mean()
+                                  for p, s in sorted(self.stage_util.items())},
+            "pred_error": {m: s.mean()
+                           for m, s in sorted(self.pred_error.items())},
+        }

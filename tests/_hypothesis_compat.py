@@ -1,0 +1,44 @@
+"""Optional-hypothesis shim for the property-based tests.
+
+`hypothesis` is not part of the minimal environment; importing it at
+module top level used to abort collection of four whole test files.  This
+shim degrades gracefully: with hypothesis installed it re-exports the real
+``given``/``settings``/``st``; without it, ``@given`` turns the test into
+an explicit skip while the rest of the module still collects and runs.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Absorbs any strategy-construction chain: attribute access, calls
+        (st.integers(1, 5).flatmap(...).map(...)) all return the stub."""
+
+        def __getattr__(self, name):
+            return self
+
+        def __call__(self, *a, **k):
+            return self
+
+    st = _AnyStrategy()
+
+    def settings(*_a, **_k):
+        return lambda fn: fn
+
+    def given(*_a, **_k):
+        def deco(fn):
+            # Zero-arg wrapper (not functools.wraps: pytest would follow
+            # __wrapped__ back to the parametrised signature and demand
+            # fixtures for the strategy arguments).
+            def skipper():
+                pytest.skip("hypothesis not installed")
+            skipper.__name__ = fn.__name__
+            skipper.__doc__ = fn.__doc__
+            return skipper
+        return deco

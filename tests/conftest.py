@@ -1,0 +1,6 @@
+import os
+import sys
+
+# Make `benchmarks.*` importable regardless of how pytest was invoked
+# (the tier-1 command only puts src/ on PYTHONPATH).
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))

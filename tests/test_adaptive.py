@@ -36,6 +36,35 @@ def test_cost_benefit_deactivation():
     assert corr2.net_speedup() > 0
 
 
+def test_probe_reenables_after_deviations_return():
+    """Deactivation is not one-way: after `probe_interval` quiet
+    observations a probe window re-runs the cost-benefit test and turns
+    the tracker back on when deviations are large again."""
+    corr = AdaptiveCorrection(monitoring_cost=0.04, window=32,
+                              probe_interval=64, probe_window=8)
+    for _ in range(32):
+        corr.observe("llm", 512.0, 1.0, 1.005)   # negligible deviations
+    assert not corr.enabled
+    # deviations return while the tracker is off; the probe must catch them
+    for _ in range(64 + 8):
+        corr.observe("llm", 2048.0, 1.0, 1.6)
+    assert corr.enabled
+    assert not corr.probing
+    # and the re-enabled tracker learns the new bucket's correction
+    assert corr.correct("llm", 2048.0, 1.0) > 1.5
+
+
+def test_probe_stays_off_when_deviations_stay_small():
+    corr = AdaptiveCorrection(monitoring_cost=0.04, window=32,
+                              probe_interval=64, probe_window=8)
+    for _ in range(32):
+        corr.observe("llm", 512.0, 1.0, 1.005)
+    assert not corr.enabled
+    for _ in range(64 + 8):
+        corr.observe("llm", 512.0, 1.0, 1.005)   # still quiet: probe closes
+    assert not corr.enabled
+
+
 def test_bucketing_is_logarithmic():
     assert AdaptiveCorrection.bucket(1000) == AdaptiveCorrection.bucket(1100)
     assert AdaptiveCorrection.bucket(1000) != AdaptiveCorrection.bucket(3000)

@@ -28,8 +28,8 @@ def test_vocab_parallel_ce_matches_dense():
         import jax, jax.numpy as jnp, numpy as np
         from repro.sharding.vocab_ce import make_vocab_parallel_ce
         from repro.train.loss import cross_entropy
-        mesh = jax.make_mesh((2,4), ("data","model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.launch.mesh import compat_make_mesh
+        mesh = compat_make_mesh((2,4), ("data","model"))
         B,S,D,V = 4, 16, 32, 64
         h = jax.random.normal(jax.random.PRNGKey(0), (B,S,D))
         w = jax.random.normal(jax.random.PRNGKey(1), (D,V)) * 0.1
@@ -55,8 +55,8 @@ def test_inter_model_communicator_preserves_values():
         from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.core.communicator import make_communicator
         from repro.sharding.partition import AxisAssignment
-        mesh = jax.make_mesh((2,4), ("data","model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.launch.mesh import compat_make_mesh
+        mesh = compat_make_mesh((2,4), ("data","model"))
         enc = AxisAssignment(batch=("data","model"), tensor=())
         llm = AxisAssignment(batch=("data",), tensor=("model",))
         comm = make_communicator(mesh, enc, llm)
@@ -65,8 +65,17 @@ def test_inter_model_communicator_preserves_values():
         with mesh:
             y = jax.jit(comm)(xs)
         np.testing.assert_allclose(np.asarray(y), np.asarray(x), rtol=1e-6)
-        # output follows the LLM layout
-        assert y.sharding.spec[0] == ("data",) or y.sharding.spec[0] == "data"
+        # Output follows the LLM layout — but only where this jax version
+        # lets with_sharding_constraint control a jit *boundary* (older
+        # GSPMD overrides boundary output shardings via propagation; the
+        # constraint still binds intermediates, the communicator's actual
+        # position in a step function).  Feature-probe first.
+        probe = jax.jit(lambda v: jax.lax.with_sharding_constraint(
+            v, NamedSharding(mesh, P("data", None, None))))
+        with mesh:
+            honors = probe(xs).sharding.spec[0] in (("data",), "data")
+        if honors:
+            assert y.sharding.spec[0] in (("data",), "data"), y.sharding.spec
         print("OK")
         """)
     assert "OK" in out
@@ -79,8 +88,8 @@ def test_pipeline_executor_matches_sequential():
         from repro.core.pipeline.executor import (build_stage_fn,
                                                   pipeline_forward,
                                                   stack_stage_params)
-        mesh = jax.make_mesh((4,), ("stage",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch.mesh import compat_make_mesh
+        mesh = compat_make_mesh((4,), ("stage",))
         n_layers, d = 8, 16
         key = jax.random.PRNGKey(0)
         W = jax.random.normal(key, (n_layers, d, d)) * (d ** -0.5)
@@ -120,8 +129,8 @@ def test_dryrun_smoke_small_mesh():
         from repro.configs import get_config
         from repro.common.types import INPUT_SHAPES, ShapeSpec
         from repro.launch import dryrun as D
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.launch.mesh import compat_make_mesh
+        mesh = compat_make_mesh((2, 4), ("data", "model"))
         spec = get_config("gemma-2b")
         spec = dataclasses.replace(spec, desc=spec.reduced_desc())
         shape = ShapeSpec("mini", 256, 16, "train")
@@ -140,8 +149,8 @@ def test_ep_shard_map_moe_matches_dense():
         import jax, jax.numpy as jnp, numpy as np
         from repro.common.types import ModelConfig
         from repro.models.layers import moe
-        mesh = jax.make_mesh((2,4), ("data","model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.launch.mesh import compat_make_mesh
+        mesh = compat_make_mesh((2,4), ("data","model"))
         cfg = ModelConfig(name="m", family="moe", n_layers=2, d_model=64,
                           n_heads=4, n_kv_heads=4, d_ff=128, vocab_size=97,
                           ffn_pattern=("moe",), n_experts=8, top_k=2,
@@ -169,8 +178,8 @@ def test_sharded_mamba_scan_matches_plain():
     out = run_devices("""
         import jax, jax.numpy as jnp, numpy as np
         from repro.models.layers.mamba import ssm_scan_xla, ssm_scan_sharded
-        mesh = jax.make_mesh((2,4), ("data","model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.launch.mesh import compat_make_mesh
+        mesh = compat_make_mesh((2,4), ("data","model"))
         B,S,di,N = 4, 32, 16, 8
         ks = jax.random.split(jax.random.PRNGKey(0), 6)
         u = jax.random.normal(ks[0], (B,S,di))
@@ -204,8 +213,8 @@ def test_tp_expert_shard_map_moe_non_divisible():
         import jax, jax.numpy as jnp, numpy as np
         from repro.common.types import ModelConfig
         from repro.models.layers import moe
-        mesh = jax.make_mesh((2,4), ("data","model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.launch.mesh import compat_make_mesh
+        mesh = compat_make_mesh((2,4), ("data","model"))
         cfg = ModelConfig(name="m", family="moe", n_layers=2, d_model=64,
                           n_heads=4, n_kv_heads=4, d_ff=128, vocab_size=97,
                           ffn_pattern=("moe",), n_experts=6, top_k=2,

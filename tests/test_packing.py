@@ -1,6 +1,6 @@
 """Sequence packing tests (paper §3.2.1)."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.data.items import DataItem
 from repro.data.packing import greedy_bin_pack, pack_tokens

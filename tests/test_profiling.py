@@ -1,7 +1,7 @@
 """Profiling Engine tests (paper §3.2): interpolation + data profiler."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.common.types import ModelConfig
 from repro.core.profiling.analytic import AnalyticBackend, V5E

@@ -3,7 +3,7 @@ import itertools
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.scheduler.ilp import solve_makespan_bnb
 from repro.core.scheduler.lpt import cmax, lower_bound, lpt_schedule

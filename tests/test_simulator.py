@@ -1,6 +1,6 @@
 """1F1B pipeline simulator tests (paper Fig. 1 / §5.3.5)."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.pipeline.simulator import (ideal_bubble_fraction,
                                            simulate_1f1b)
