@@ -27,7 +27,7 @@ import numpy as np
 from repro.configs import get_config
 from repro.core.engine import DFLOPEngine
 from repro.core.optimizer.space import ClusterSpec, ModuleParallelism, ParallelismPlan
-from repro.core.pipeline.simulator import simulate_1f1b
+from repro.core.pipeline.simulator import simulate_bucket_ranks
 from repro.core.profiling.analytic import AnalyticBackend, V5E
 from repro.core.scheduler.online import OnlineMicrobatchScheduler
 from repro.data.synthetic import MixedDataset
@@ -74,37 +74,34 @@ class IterStats:
     tokens: int
 
 
-def _stage_rows(plan: ParallelismPlan, e_bucket: float, l_bucket: float):
-    """Per-stage fwd durations for one microbatch's buckets."""
-    rows = []
-    if plan.encoder is not None:
-        rows += [e_bucket / plan.encoder.pp] * plan.encoder.pp
-    rows += [l_bucket / plan.llm.pp] * plan.llm.pp
-    return rows
-
-
 def simulate_iteration(plan: ParallelismPlan,
                        sched: OnlineMicrobatchScheduler,
                        items, *, random_assign: bool, seed: int = 0,
                        mode: str = "train") -> IterStats:
+    """Play one scheduled global batch through the 1F1B simulator.
+
+    Bucket durations come from `ScheduleOutput.e_dur/l_dur` (already
+    per-stage: the scheduler divides by the module's PP degree); the
+    bucket→(mb, rank) layout, per-stage rows and fwd/bwd split live in
+    `simulate_bucket_ranks` — the same code path the search objectives
+    score with, so figures and objective predictions share one model."""
     out = (sched.schedule_random(items, seed=seed) if random_assign
            else sched.schedule(items))
     n_mb, dp = plan.n_mb, plan.llm.dp
     e_dur, l_dur = out.e_dur, out.l_dur
     e_pp = plan.encoder.pp if plan.encoder else 0
     p = e_pp + plan.llm.pp
+    e_b = np.array([float(e_dur[g].sum()) if len(g) else 0.0
+                    for g in out.groups])
+    l_b = np.array([float(l_dur[g].sum()) if len(g) else 0.0
+                    for g in out.groups])
     step_time = 0.0
     idle = busy = 0.0
     stage_busy_acc = np.zeros(p)
-    for r in range(dp):
-        fwd = np.zeros((p, n_mb))
-        for i in range(n_mb):
-            g = out.groups[i * dp + r]
-            e_b = float(e_dur[g].sum()) if len(g) else 0.0
-            l_b = float(l_dur[g].sum()) if len(g) else 0.0
-            fwd[:, i] = _stage_rows(plan, e_b, l_b)
-        tr = simulate_1f1b(fwd, BWD_OVER_FWD * fwd) if mode == "train" \
-            else simulate_1f1b(fwd, 0.0 * fwd)
+    for tr in simulate_bucket_ranks(e_b, l_b, n_mb=n_mb, dp=dp, e_pp=e_pp,
+                                    l_pp=plan.llm.pp,
+                                    bwd_over_fwd=BWD_OVER_FWD,
+                                    backward=(mode == "train")):
         step_time = max(step_time, tr.makespan)
         idle += tr.total_idle
         busy += float(tr.stage_busy.sum())

@@ -15,6 +15,7 @@ the shift).  A Chrome trace of the run is written next to the results.
 from __future__ import annotations
 
 import os
+import time
 
 import numpy as np
 
@@ -26,7 +27,12 @@ TRACE_PATH = os.path.join(os.path.dirname(__file__), "results",
 
 
 def run(arch: str = "llava-ov-llama8b", gbs: int = 64,
-        n_pre: int = 6, n_post: int = 24, seed: int = 0):
+        n_pre: int = 6, n_post: int = 24, seed: int = 0,
+        step_wall_s: float = 0.15):
+    """step_wall_s emulates the accelerator step each iteration overlaps:
+    the paper's background re-plan lands *during* training, so the loop
+    must spend wall time per batch the way a real run would (scheduling
+    itself is now sub-ms and no longer provides it)."""
     eng = engine_for(arch, POD_CLUSTER, mixture="single_image", seed=seed)
     eng.plan(gbs)
     ctl = eng.runtime(gbs, adaptive=False, ilp_time_limit_s=0.05)
@@ -47,6 +53,8 @@ def run(arch: str = "llava-ov-llama8b", gbs: int = 64,
         phase = "pre" if i < n_pre else "post"
         items = (pre_ds if phase == "pre" else post_ds).sample(gbs)
         out = ctl.schedule(items)
+        if step_wall_s:
+            time.sleep(step_wall_s)       # the "training step" runs here
         if swap_iter is None and ctl.metrics.n_replans > 0:
             swap_iter = i
         stale_out = stale_sched.schedule(items)

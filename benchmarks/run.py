@@ -37,6 +37,7 @@ def main() -> None:
         fig14_stage_throughput,
         fig15_adaptive,
         fig16_replan,
+        fig17_objective,
         roofline,
         tab4_overhead,
     )
@@ -54,6 +55,7 @@ def main() -> None:
         "fig14": fig14_stage_throughput,
         "fig15": fig15_adaptive,
         "fig16": fig16_replan,
+        "fig17": fig17_objective,
         "tab4": tab4_overhead,
         "roofline": roofline,
     }

@@ -76,12 +76,16 @@ def main():
                     help="export a Chrome trace of the run to this path")
     ap.add_argument("--replan", action="store_true",
                     help="enable background re-planning on drift")
+    ap.add_argument("--objective", default="mean",
+                    choices=["mean", "expected-random", "balanced-quantile"],
+                    help="search objective used by background re-planning")
     args = ap.parse_args()
 
     ds = MixedDataset("mixed", seed=0, tokens_per_media_item=TPM)
     eng = DFLOPEngine(llm_cfg=LLM, enc_cfg=ENC, e_seq_len=16,
                       cluster=ClusterSpec(n_chips=16, chips_per_node=16),
-                      tokens_per_media_item=TPM)
+                      tokens_per_media_item=TPM,
+                      objective=args.objective)
     eng.profile(ds)
     plan = ParallelismPlan(llm=ModuleParallelism(1, 1, 1),
                            encoder=ModuleParallelism(1, 1, 1), n_mb=4)

@@ -23,6 +23,7 @@ from typing import Optional, Sequence
 import numpy as np
 
 from repro.common.types import ModelConfig
+from repro.core.optimizer.objective import Objective
 from repro.core.optimizer.search import ParallelismOptimizer, SearchResult
 from repro.core.optimizer.space import ClusterSpec, ParallelismPlan
 from repro.core.profiling.analytic import AnalyticBackend, HardwareSpec, V5E
@@ -45,7 +46,12 @@ class DFLOPEngine:
     e_seq_len: int = 729                 # encoder tokens per media item
     backend: Optional[Backend] = None
     mode: str = "train"
-    objective: str = "mean"
+    # search objective: "mean" (Algorithm 1), "expected-random" (Monte-Carlo
+    # over random assignment), "balanced-quantile" (heterogeneity-aware
+    # LPT-balanced p90), or an `objective.Objective` *instance* — pass an
+    # instance to pin non-default config (e.g. quantile) so background
+    # re-plans score plans the same way the initial search did.
+    objective: "str | Objective" = "mean"
 
     perf: Optional[PerfModel] = None
     dist: Optional[ShapeDistribution] = None
@@ -73,9 +79,17 @@ class DFLOPEngine:
 
     # ------------------------------------------------------------------ #
     def plan(self, gbs: int, **kw) -> SearchResult:
+        """Run the optimizer.  kw forwards to `ParallelismOptimizer` —
+        notably ``calibrator=`` (couple the search to runtime calibration),
+        ``seed=`` (Monte-Carlo draw) and ``quantile=``/``n_trials=``.
+        The resolved objective instance is pinned back onto
+        ``self.objective`` so background re-plans (`runtime()`) score plans
+        under the same configuration the initial search used."""
         assert self.perf is not None, "call profile() first"
+        kw.setdefault("objective", self.objective)
         opt = ParallelismOptimizer(self.cluster, self.perf, mode=self.mode,
-                                   objective=self.objective, **kw)
+                                   **kw)
+        self.objective = opt.objective_obj
         self.plan_result = opt.search(self.dist, gbs)
         return self.plan_result
 
@@ -99,6 +113,7 @@ class DFLOPEngine:
                 adaptive: bool = True, calibrate: bool = True,
                 trace: bool = True, drift=None, auto_replan: bool = True,
                 min_improvement: float = 0.02,
+                replan_n_trials: int = 8,
                 ilp_time_limit_s: float = 0.25):
         """Closed control loop: returns a `repro.runtime.RuntimeController`
         wrapping this engine + a fresh scheduler.  Plans first if needed."""
@@ -117,4 +132,5 @@ class DFLOPEngine:
             metrics=RuntimeMetrics(),
             calibration=OnlineCalibrator() if calibrate else None,
             drift=drift if drift is not None else DriftDetector(),
-            auto_replan=auto_replan, min_improvement=min_improvement)
+            auto_replan=auto_replan, min_improvement=min_improvement,
+            replan_n_trials=replan_n_trials)

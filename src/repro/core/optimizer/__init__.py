@@ -5,6 +5,15 @@ from repro.core.optimizer.space import (
     find_combs,
     enumerate_configs,
 )
+from repro.core.optimizer.objective import (
+    BalancedQuantileObjective,
+    ExpectedRandomObjective,
+    MeanObjective,
+    Objective,
+    ObjectiveResult,
+    OBJECTIVE_NAMES,
+    get_objective,
+)
 from repro.core.optimizer.search import ParallelismOptimizer, SearchResult
 
 __all__ = [
@@ -15,4 +24,11 @@ __all__ = [
     "enumerate_configs",
     "ParallelismOptimizer",
     "SearchResult",
+    "Objective",
+    "ObjectiveResult",
+    "MeanObjective",
+    "ExpectedRandomObjective",
+    "BalancedQuantileObjective",
+    "get_objective",
+    "OBJECTIVE_NAMES",
 ]

@@ -1,13 +1,16 @@
-"""Makespan model (paper §3.3.1).
+"""Makespan model primitives (paper §3.3.1).
 
     T = (N_mb + E_pp + L_pp − 1) · max(E_dur, L_dur)
 
 Stage durations follow Algorithm 1 lines 25–26: module FLOPs for the
 microbatch's (mean) shape, divided by the profiled throughput of its TP
-group and by its pipeline degree.  The expected-makespan objective (Eq. 1)
-is evaluated either with the mean-shape approximation (Algorithm 1) or by
-Monte-Carlo over sampled microbatch compositions from the Data Profiler's
-distribution.
+group and by its pipeline degree.
+
+How a *plan* is scored against a whole shape distribution lives in
+`repro.core.optimizer.objective` (the pluggable Eq. 1 estimators: ``mean``,
+``expected-random``, ``balanced-quantile``).  This module keeps the closed
+forms they build on, plus the legacy aggregate-shape Monte-Carlo
+(`expected_makespan`) retained for reference comparisons.
 """
 from __future__ import annotations
 
@@ -23,6 +26,30 @@ from repro.core.profiling.model_profiler import PerfModel
 def pipeline_makespan(n_mb: int, e_pp: int, l_pp: int, e_dur: float,
                       l_dur: float) -> float:
     return (n_mb + e_pp + l_pp - 1) * max(e_dur, l_dur)
+
+
+def accepts_fallback(fn) -> bool:
+    """True if a corrector function takes a `fallback_shape` keyword —
+    checked via signature, never by a trial call (a probe call would
+    double-invoke stateful correctors and mask their real TypeErrors)."""
+    import inspect
+    try:
+        return "fallback_shape" in inspect.signature(fn).parameters
+    except (TypeError, ValueError):
+        return False
+
+
+def correct_scalar(corrector, module: str, shape: float, tp: int,
+                   dur: float, fallback_shape: Optional[float] = None) -> float:
+    """Scalar `DurationCorrector` application, forwarding `fallback_shape`
+    only to correctors whose `correct` accepts it (see
+    `OnlineCalibrator.correct` for the fallback semantics)."""
+    if corrector is None:
+        return dur
+    if fallback_shape is not None and accepts_fallback(corrector.correct):
+        return corrector.correct(module, shape, tp, dur,
+                                 fallback_shape=fallback_shape)
+    return corrector.correct(module, shape, tp, dur)
 
 
 def stage_durations(perf: PerfModel, ep: Optional[ModuleParallelism],
@@ -45,13 +72,24 @@ def stage_durations(perf: PerfModel, ep: Optional[ModuleParallelism],
 
 def mean_makespan(perf: PerfModel, plan: ParallelismPlan,
                   mean_bsz: float, mean_seq: float, gbs: int,
-                  mode: str = "train") -> float:
-    """Algorithm 1's mean-shape estimate for plan θ."""
+                  mode: str = "train", corrector=None) -> float:
+    """Algorithm 1's mean-shape estimate for plan θ.
+
+    corrector: optional `objective.DurationCorrector`.  Corrections are
+    multiplicative ratios, so applying them to the per-stage (already /pp)
+    duration equals correcting the TP-group duration — the same keying
+    `search._ModuleTables` uses."""
     i = plan.n_mb
     ep, lp = plan.encoder, plan.llm
     t_bsz = mean_bsz * gbs / (i * ep.dp) if ep else 0.0
     t_seq = mean_seq * gbs / (i * lp.dp)
     e_dur, l_dur = stage_durations(perf, ep, lp, t_bsz, t_seq, mode)
+    if corrector is not None:
+        if ep is not None and e_dur > 0:
+            e_dur = correct_scalar(corrector, "encoder", t_bsz, ep.tp,
+                                   e_dur, fallback_shape=mean_bsz)
+        l_dur = correct_scalar(corrector, "llm", t_seq, lp.tp, l_dur,
+                               fallback_shape=mean_seq)
     e_pp = ep.pp if ep else 0
     return pipeline_makespan(i, e_pp, lp.pp, e_dur, l_dur)
 
@@ -60,12 +98,15 @@ def expected_makespan(perf: PerfModel, plan: ParallelismPlan,
                       dist: ShapeDistribution, gbs: int, *,
                       n_trials: int = 16, seed: int = 0,
                       mode: str = "train") -> float:
-    """Eq. 1: E_D[T(d;θ)] via Monte-Carlo microbatch compositions.
+    """Legacy Eq. 1 Monte-Carlo (aggregate-shape semantics).
 
     Samples `n_trials` random global batches from the empirical
     distribution, randomly partitions each into N_mb·L_dp buckets and takes
     the slowest bucket as the stage duration (random assignment — the
-    baseline the Online Scheduler improves on)."""
+    baseline the Online Scheduler improves on).  Bucket durations are
+    computed from the *summed* shape; the objective subsystem
+    (`objective.ExpectedRandomObjective`) instead sums per-item durations,
+    matching what the scheduler's C_max actually measures — prefer it."""
     rng = np.random.default_rng(seed)
     i, ep, lp = plan.n_mb, plan.encoder, plan.llm
     m = i * lp.dp
@@ -92,7 +133,7 @@ def expected_makespan(perf: PerfModel, plan: ParallelismPlan,
             e_pp = ep.pp
         else:
             e_dur, e_pp = 0.0, 0
-        l_durs = perf.l_dur_batch(s_b, lp.tp) / lp.pp
+        l_durs = perf.l_dur_batch(s_b, lp.tp, mode) / lp.pp
         l_dur = float(l_durs.max())
         total += pipeline_makespan(i, e_pp, lp.pp, e_dur, l_dur)
     return total / n_trials

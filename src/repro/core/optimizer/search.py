@@ -12,6 +12,15 @@ precompute duration and memory tables indexed by (tp[, pp], k) once and
 evaluate every candidate configuration with vectorized lookups — this keeps
 the optimizer sub-second at 1024 chips (Fig. 16a) while remaining exactly
 Algorithm 1.  Complexity matches the paper: O(GBS · N_chips^(1+ε)).
+
+The scoring rule is pluggable (`repro.core.optimizer.objective`): the
+vectorized mean-shape pass is always the prefilter; for a sampling
+objective (``expected-random``, ``balanced-quantile``) the top candidates
+are re-ranked — including alternative N_mb, since heterogeneity-aware
+scores systematically prefer *fewer* buckets than the mean-shape estimate.
+A `DurationCorrector` (e.g. the runtime's `OnlineCalibrator`) refines both
+the tables and the Monte-Carlo durations, so the search sees the same
+corrected durations the Online Scheduler trusts.
 """
 from __future__ import annotations
 
@@ -21,10 +30,12 @@ from typing import Dict, Optional, Tuple
 
 import numpy as np
 
-from repro.core.optimizer.makespan import (
-    expected_makespan,
-    mean_makespan,
-    pipeline_makespan,
+from repro.core.optimizer.makespan import mean_makespan
+from repro.core.optimizer.objective import (
+    DurationCorrector,
+    Objective,
+    correct_durations,
+    get_objective,
 )
 from repro.core.optimizer.space import (
     ClusterSpec,
@@ -33,7 +44,6 @@ from repro.core.optimizer.space import (
     enumerate_configs,
 )
 from repro.core.profiling.data_profiler import ShapeDistribution
-from repro.core.profiling.flops import module_flops
 from repro.core.profiling.model_profiler import ModulePerf, PerfModel
 
 
@@ -52,42 +62,34 @@ class _ModuleTables:
     model_state[tp][pp] — Eq.4/5 model-state bytes
     act[tp][pp][k]      — activation bytes for shape(k)
     where shape(k) = mean_shape · GBS / k.
+
+    With a `corrector`, every duration entry is refined at its own shape —
+    the per-(module, shape-bucket, tp) path the Online Scheduler applies to
+    its predictions, so search-time and schedule-time durations agree.
     """
 
     def __init__(self, perf: ModulePerf, mean_shape: float, gbs: int,
-                 tps, pps, mode: str, is_encoder: bool):
+                 tps, pps, mode: str, is_encoder: bool, *,
+                 corrector: Optional[DurationCorrector] = None):
         self.gbs = gbs
+        self.module = "encoder" if is_encoder else "llm"
         ks = np.arange(1, gbs + 1, dtype=np.float64)
         shapes = mean_shape * gbs / ks                     # shape(k)
+        self.shapes = shapes
         n_layers = perf.cfg.n_layers
 
-        # --- FLOPs per shape (vectorized via the attn/lin split) -------- #
-        if is_encoder:
-            per_item = module_flops(perf.cfg, 1.0, perf.fixed_seq, mode=mode)
-            fl_attn = per_item.attn * shapes
-            fl_lin = per_item.lin * shapes
-        else:
-            # attn(s) = a1·s + a2·s², lin(s) = b1·s  (exact: polynomial)
-            f1 = module_flops(perf.cfg, 1.0, 1.0, mode=mode)
-            f2 = module_flops(perf.cfg, 1.0, 2.0, mode=mode)
-            a2 = (f2.attn - 2 * f1.attn) / 2.0
-            a1 = f1.attn - a2
-            if perf.cfg.attention_kind == "sliding" and perf.cfg.window_size:
-                # piecewise: quadratic until W, then linear — evaluate exact
-                fl_attn = np.array([module_flops(perf.cfg, 1.0, s, mode=mode).attn
-                                    for s in shapes])
-            else:
-                fl_attn = a1 * shapes + a2 * shapes ** 2
-            fl_lin = f1.lin * shapes
+        # the same vectorized attn/lin-polynomial duration path the
+        # scheduler's per-item predictions use (ModulePerf.duration_batch).
+        # Corrections key on shape(k); aggregate sizes the per-item
+        # calibration never observed fall back to the mean item shape's
+        # cell (see OnlineCalibrator.correct) so a uniform runtime
+        # slowdown reaches every table entry, not just item-scale ones.
         self.dur: Dict[int, np.ndarray] = {}
         for tp in tps:
-            if perf.thr_attn is not None and perf.thr_lin is not None:
-                thr_a = perf.thr_attn.batch(shapes, tp)
-                thr_l = perf.thr_lin.batch(shapes, tp)
-                self.dur[tp] = fl_attn / thr_a + fl_lin / thr_l
-            else:
-                thr = perf.thr_all.batch(shapes, tp)
-                self.dur[tp] = (fl_attn + fl_lin) / thr
+            dur = perf.duration_batch(shapes, tp, mode)
+            self.dur[tp] = correct_durations(corrector, self.module, shapes,
+                                             tp, dur,
+                                             fallback_shape=mean_shape)
 
         self.model_state: Dict[Tuple[int, int], float] = {}
         self.act: Dict[Tuple[int, int], np.ndarray] = {}
@@ -117,16 +119,34 @@ class SearchResult:
 class ParallelismOptimizer:
     def __init__(self, cluster: ClusterSpec, perf: PerfModel, *,
                  max_pp: Optional[int] = None, mode: str = "train",
-                 objective: str = "mean", n_trials: int = 8,
+                 objective: str | Objective = "mean",
+                 n_trials: Optional[int] = None,
+                 quantile: Optional[float] = None, seed: int = 0,
+                 calibrator: Optional[DurationCorrector] = None,
                  partition_step: int = 0, keep_history: bool = False,
                  refine_expected_top_k: int = 32):
-        """objective: 'mean' (Algorithm 1) or 'expected' (Eq. 1: mean-based
-        prefilter, then Monte-Carlo re-rank of the top candidates)."""
+        """objective: 'mean' (Algorithm 1), 'expected-random' (Eq. 1 via
+        Monte-Carlo over random round-robin assignment), 'balanced-quantile'
+        (LPT-balanced assignment scored at `quantile`), or any
+        `objective.Objective` instance.  Sampling objectives use the
+        mean-based prefilter, then re-rank the top candidates.
+        n_trials/quantile default to the objective's own configuration
+        (None = leave untouched; for an instance a provided value yields a
+        reconfigured copy).
+
+        seed: base seed for the Monte-Carlo draws — equal seeds reproduce
+        the search exactly, distinct seeds resample the trial batches.
+        calibrator: optional `DurationCorrector` refining every duration
+        the search evaluates (tables and Monte-Carlo alike)."""
         self.cluster = cluster
         self.perf = perf
         self.mode = mode
-        self.objective = objective
-        self.n_trials = n_trials
+        self.objective_obj = get_objective(objective, n_trials=n_trials,
+                                           q=quantile)
+        self.objective = self.objective_obj.name
+        self.n_trials = getattr(self.objective_obj, "n_trials", n_trials)
+        self.seed = seed
+        self.calibrator = calibrator
         self.keep_history = keep_history
         self.refine_top_k = refine_expected_top_k
         self.max_pp = max_pp if max_pp is not None else \
@@ -140,29 +160,68 @@ class ParallelismOptimizer:
     def _divisor_pps(self, n_layers_cap: int):
         return list(range(1, min(self.max_pp, n_layers_cap) + 1))
 
+    def build_tables(self, dist: ShapeDistribution, gbs: int
+                     ) -> Tuple[_ModuleTables, Optional[_ModuleTables]]:
+        """(llm_tables, encoder_tables) for `search()` — public so tests can
+        assert the calibrator-refined durations match the scheduler's."""
+        perf, cluster = self.perf, self.cluster
+        mean_bsz, mean_seq = dist.mean() if len(dist) else (1.0, 1.0)
+        tps = _pow2s_up_to(cluster.chips_per_node)
+        l_pps = self._divisor_pps(perf.llm.cfg.n_layers)
+        l_tab = _ModuleTables(perf.llm, mean_seq, gbs, tps, l_pps,
+                              self.mode, is_encoder=False,
+                              corrector=self.calibrator)
+        e_tab = None
+        if perf.encoder is not None:
+            e_pps = self._divisor_pps(perf.encoder.cfg.n_layers)
+            e_tab = _ModuleTables(perf.encoder, mean_bsz, gbs, tps, e_pps,
+                                  self.mode, is_encoder=True,
+                                  corrector=self.calibrator)
+        return l_tab, e_tab
+
+    def _eval_config(self, ep: Optional[ModuleParallelism],
+                     lp: ModuleParallelism, gbs: int,
+                     l_tab: _ModuleTables, e_tab: Optional[_ModuleTables]):
+        """Mean-shape makespan + feasibility for every N_mb of one config.
+        Returns (i, T, feas) arrays, or None when no N_mb fits in memory
+        (short-circuits before the makespan math — the search hot path)."""
+        mem_cap = self.cluster.mem_bytes
+        n_max = max(1, gbs // lp.dp)
+        i = np.arange(1, n_max + 1)
+        k_l = np.minimum(i * lp.dp, gbs) - 1            # table index
+        l_mem = l_tab.model_state[(lp.tp, lp.pp)] \
+            + lp.pp * l_tab.act[(lp.tp, lp.pp)][k_l]
+        feas = l_mem <= mem_cap
+        if ep is not None:
+            k_e = np.minimum(i * ep.dp, gbs) - 1
+            e_mem = e_tab.model_state[(ep.tp, ep.pp)] \
+                + (ep.pp + lp.pp) * e_tab.act[(ep.tp, ep.pp)][k_e]
+            feas &= e_mem <= mem_cap
+        if not feas.any():
+            return None
+        l_dur = l_tab.dur[lp.tp][k_l] / lp.pp
+        if ep is not None:
+            e_dur = e_tab.dur[ep.tp][k_e] / ep.pp
+            e_pp = ep.pp
+        else:
+            e_dur = np.zeros_like(l_dur)
+            e_pp = 0
+        T = (i + e_pp + lp.pp - 1) * np.maximum(e_dur, l_dur)
+        T = np.where(feas, T, np.inf)
+        return i, T, feas
+
     def search(self, dist: ShapeDistribution, gbs: int) -> SearchResult:
         t0 = time.monotonic()
         perf, cluster = self.perf, self.cluster
         has_encoder = perf.encoder is not None
-        mean_bsz, mean_seq = dist.mean() if len(dist) else (1.0, 1.0)
-        tps = _pow2s_up_to(cluster.chips_per_node)
-
-        l_pps = self._divisor_pps(perf.llm.cfg.n_layers)
-        l_tab = _ModuleTables(perf.llm, mean_seq, gbs, tps, l_pps,
-                              self.mode, is_encoder=False)
-        e_tab = None
-        if has_encoder:
-            e_pps = self._divisor_pps(perf.encoder.cfg.n_layers)
-            e_tab = _ModuleTables(perf.encoder, mean_bsz, gbs, tps, e_pps,
-                                  self.mode, is_encoder=True)
+        l_tab, e_tab = self.build_tables(dist, gbs)
 
         best_T = float("inf")
         best: Optional[ParallelismPlan] = None
-        best_i = 1
         n_configs = n_feasible = 0
         history = []
-        mem_cap = cluster.mem_bytes
-        top: list = []       # (T, plan) candidates for expected re-rank
+        rerank = self.objective != "mean" and len(dist) > 0
+        top: list = []       # (T_mean, ep, lp) candidates for the re-rank
 
         for ep, lp in enumerate_configs(cluster, has_encoder=has_encoder,
                                         max_pp=self.max_pp,
@@ -172,27 +231,10 @@ class ParallelismOptimizer:
             if ep is not None and ep.pp > perf.encoder.cfg.n_layers:
                 continue
             n_configs += 1
-            n_max = max(1, gbs // lp.dp)
-            i = np.arange(1, n_max + 1)
-            k_l = np.minimum(i * lp.dp, gbs) - 1            # table index
-            l_dur = l_tab.dur[lp.tp][k_l] / lp.pp
-            l_mem = l_tab.model_state[(lp.tp, lp.pp)] \
-                + lp.pp * l_tab.act[(lp.tp, lp.pp)][k_l]
-            feas = l_mem <= mem_cap
-            if ep is not None:
-                k_e = np.minimum(i * ep.dp, gbs) - 1
-                e_dur = e_tab.dur[ep.tp][k_e] / ep.pp
-                e_mem = e_tab.model_state[(ep.tp, ep.pp)] \
-                    + (ep.pp + lp.pp) * e_tab.act[(ep.tp, ep.pp)][k_e]
-                feas &= e_mem <= mem_cap
-                e_pp = ep.pp
-            else:
-                e_dur = np.zeros_like(l_dur)
-                e_pp = 0
-            if not feas.any():
+            evald = self._eval_config(ep, lp, gbs, l_tab, e_tab)
+            if evald is None:
                 continue
-            T = (i + e_pp + lp.pp - 1) * np.maximum(e_dur, l_dur)
-            T = np.where(feas, T, np.inf)
+            i, T, feas = evald
             n_feasible += int(feas.sum())
             j = int(np.argmin(T))
             if self.keep_history:
@@ -201,21 +243,50 @@ class ParallelismOptimizer:
             if T[j] < best_T:
                 best_T = float(T[j])
                 best = ParallelismPlan(llm=lp, encoder=ep, n_mb=int(i[j]))
-            if self.objective == "expected":
-                top.append((float(T[j]),
-                            ParallelismPlan(llm=lp, encoder=ep, n_mb=int(i[j]))))
+            if rerank:
+                top.append((float(T[j]), ep, lp))
 
-        if self.objective == "expected" and len(dist) and top:
-            top.sort(key=lambda t: t[0])
-            best_T = float("inf")
-            for _, plan in top[: self.refine_top_k]:
-                T = expected_makespan(perf, plan, dist, gbs,
-                                      n_trials=self.n_trials, mode=self.mode)
-                if T < best_T:
-                    best_T, best = T, plan
+        if rerank and top:
+            best, best_T = self._rerank(top, dist, gbs, l_tab, e_tab,
+                                        fallback=(best, best_T))
 
         return SearchResult(best, best_T, n_configs, n_feasible,
                             time.monotonic() - t0, history)
+
+    def _rerank(self, top: list, dist: ShapeDistribution, gbs: int,
+                l_tab: _ModuleTables, e_tab: Optional[_ModuleTables],
+                fallback):
+        """Re-score the best mean-prefiltered configs under the sampling
+        objective.  Each config is expanded over alternative feasible N_mb
+        (powers of two plus the mean pick): the mean-shape estimate
+        systematically overrates many-bucket plans under fat-tailed shape
+        distributions, so the objective must be free to choose fewer."""
+        top.sort(key=lambda t: t[0])
+        plans = []
+        for _, ep, lp in top[: self.refine_top_k]:
+            evald = self._eval_config(ep, lp, gbs, l_tab, e_tab)
+            if evald is None:
+                continue
+            i, _T, feas = evald
+            cands = {int(i[int(np.argmin(_T))])}
+            cands.update(v for v in _pow2s_up_to(int(i[-1])) if feas[v - 1])
+            plans.extend(ParallelismPlan(llm=lp, encoder=ep, n_mb=n_mb)
+                         for n_mb in sorted(cands) if feas[n_mb - 1])
+        if not plans:
+            return fallback
+        # estimator consistency (simulate vs pipeline fallback) is keyed on
+        # gbs inside the objective, so every candidate — and the runtime
+        # controller's stale-plan score — uses the same one.
+        obj = self.objective_obj
+        best, best_T = None, float("inf")
+        dur_cache: Dict = {}
+        for plan in plans:
+            T = obj.evaluate(self.perf, plan, dist, gbs, mode=self.mode,
+                             corrector=self.calibrator, seed=self.seed,
+                             cache=dur_cache)
+            if T < best_T:
+                best_T, best = T, plan
+        return (best, best_T) if best is not None else fallback
 
     # ------------------------------------------------------------------ #
     def baseline_uniform(self, dist: ShapeDistribution, gbs: int,

@@ -48,6 +48,12 @@ class ParallelismPlan:
         return e_pp + self.llm.pp
 
     @property
+    def n_buckets(self) -> int:
+        """m = N_mb · L_dp — the partition arity the Online Scheduler (and
+        every sampling objective) balances a global batch into."""
+        return self.n_mb * self.llm.dp
+
+    @property
     def chips(self) -> int:
         return self.llm.chips + (self.encoder.chips if self.encoder else 0)
 

@@ -100,6 +100,42 @@ def simulate_1f1b(fwd: np.ndarray, bwd: np.ndarray | None = None) -> PipelineTra
     return PipelineTrace(makespan, busy, idle, ops)
 
 
+def simulate_bucket_ranks(e_b: np.ndarray, l_b: np.ndarray, *, n_mb: int,
+                          dp: int, e_pp: int, l_pp: int,
+                          bwd_over_fwd: float = 2.0, backward: bool = True):
+    """Per-rank 1F1B traces for m = n_mb · dp scheduler buckets.
+
+    This is THE convention shared by the search objectives
+    (`objective._SamplingObjective.trial_makespan`) and the benchmark
+    harness (`benchmarks.common.simulate_iteration`) — keep it in one
+    place so predicted and "ground truth" simulations can never drift:
+
+      * bucket i·dp + r is microbatch i of data-parallel rank r (the order
+        the data loader consumes `ScheduleOutput.groups`);
+      * bucket durations are per-stage (already divided by the module's PP
+        degree): each of the module's stages takes the bucket value as-is;
+      * with `backward`, durations are full fwd+bwd cost and are split
+        1 : bwd_over_fwd over the 1F1B phases (so a homogeneous batch
+        reproduces the closed form (n_mb + p − 1) · c); without, they are
+        forward-only.
+
+    Yields one `PipelineTrace` per rank.
+    """
+    p = e_pp + l_pp
+    for r in range(dp):
+        rows = np.empty((p, n_mb))
+        for i in range(n_mb):
+            b = i * dp + r
+            rows[:e_pp, i] = e_b[b]
+            rows[e_pp:, i] = l_b[b]
+        if backward:
+            fwd = rows / (1.0 + bwd_over_fwd)
+            bwd = bwd_over_fwd * fwd
+        else:
+            fwd, bwd = rows, 0.0 * rows
+        yield simulate_1f1b(fwd, bwd)
+
+
 def ideal_bubble_fraction(p: int, m: int) -> float:
     """Theoretical 1F1B bubble (p−1)/m ... /(m + p − 1) of the makespan for
     homogeneous microbatches (paper cites (p−1)/m [Megatron])."""

@@ -83,6 +83,45 @@ class ModulePerf:
         shape = seq if self.fixed_seq == 0 else batch
         return fl.total / self.thr_all(shape, tp)
 
+    def duration_batch(self, shapes: np.ndarray, tp: int,
+                       mode: str = "train") -> np.ndarray:
+        """Vectorized `duration` over many shapes (encoder: effective batch;
+        LLM: packed seq len).  FLOPs come from the attn/lin polynomial —
+        attn(s) = a1·s + a2·s², lin(s) = b1·s — exactly the construction the
+        optimizer's `_ModuleTables` uses, so table entries and per-item
+        Monte-Carlo durations are the same computation.  Non-positive
+        shapes map to duration 0."""
+        shapes = np.asarray(shapes, dtype=np.float64)
+        out = np.zeros_like(shapes)
+        pos = shapes > 0
+        if not pos.any():
+            return out
+        s = shapes[pos]
+        if self.fixed_seq:
+            # encoder: FLOPs linear in the effective batch at fixed seq
+            per = module_flops(self.cfg, 1.0, self.fixed_seq, mode=mode)
+            fl_attn = per.attn * s
+            fl_lin = per.lin * s
+        else:
+            f1 = module_flops(self.cfg, 1.0, 1.0, mode=mode)
+            f2 = module_flops(self.cfg, 1.0, 2.0, mode=mode)
+            a2 = (f2.attn - 2 * f1.attn) / 2.0
+            a1 = f1.attn - a2
+            if self.cfg.attention_kind == "sliding" and self.cfg.window_size:
+                # piecewise: quadratic until W, then linear — evaluate exact
+                fl_attn = np.array([module_flops(self.cfg, 1.0, v,
+                                                 mode=mode).attn for v in s])
+            else:
+                fl_attn = a1 * s + a2 * s ** 2
+            fl_lin = f1.lin * s
+        if self.thr_attn is not None and self.thr_lin is not None:
+            dur = fl_attn / self.thr_attn.batch(s, tp) \
+                + fl_lin / self.thr_lin.batch(s, tp)
+        else:
+            dur = (fl_attn + fl_lin) / self.thr_all.batch(s, tp)
+        out[pos] = dur
+        return out
+
 
 @dataclass
 class PerfModel:
@@ -103,14 +142,15 @@ class PerfModel:
             return 0.0
         return self.llm.duration(1.0, seq_len, tp, mode)
 
-    def e_dur_batch(self, eff_batches: np.ndarray, tp: int) -> np.ndarray:
+    def e_dur_batch(self, eff_batches: np.ndarray, tp: int,
+                    mode: str = "train") -> np.ndarray:
         if self.encoder is None:
-            return np.zeros_like(eff_batches, dtype=np.float64)
-        out = np.array([self.e_dur(float(b), tp) for b in eff_batches])
-        return out
+            return np.zeros_like(np.asarray(eff_batches, dtype=np.float64))
+        return self.encoder.duration_batch(eff_batches, tp, mode)
 
-    def l_dur_batch(self, seq_lens: np.ndarray, tp: int) -> np.ndarray:
-        return np.array([self.l_dur(float(s), tp) for s in seq_lens])
+    def l_dur_batch(self, seq_lens: np.ndarray, tp: int,
+                    mode: str = "train") -> np.ndarray:
+        return self.llm.duration_batch(seq_lens, tp, mode)
 
 
 DEFAULT_TPS = (1, 2, 4, 8, 16)

@@ -16,6 +16,7 @@ from typing import List, Optional, Sequence
 
 import numpy as np
 
+from repro.core.optimizer.objective import corrected_item_durations
 from repro.core.optimizer.space import ParallelismPlan
 from repro.core.profiling.model_profiler import PerfModel
 from repro.core.scheduler.adaptive import AdaptiveCorrection
@@ -72,7 +73,7 @@ class OnlineMicrobatchScheduler:
     # ------------------------------------------------------------------ #
     @property
     def n_buckets(self) -> int:
-        return self.plan.n_mb * self.plan.llm.dp
+        return self.plan.n_buckets
 
     def set_plan(self, plan: ParallelismPlan) -> None:
         """Hot-swap the active plan θ*.  Takes effect on the next
@@ -82,35 +83,26 @@ class OnlineMicrobatchScheduler:
 
     def item_durations(self, items: Sequence[DataItem],
                        plan: Optional[ParallelismPlan] = None) -> tuple[np.ndarray, np.ndarray]:
-        """Predicted per-item stage durations under θ* (§3.4.2 step 1)."""
+        """Predicted per-item stage durations under θ* (§3.4.2 step 1).
+
+        Delegates to the duration path shared with the optimizer's sampling
+        objectives (`objective.corrected_item_durations`), so search-time
+        Monte-Carlo and schedule-time predictions agree on identical shapes
+        by construction."""
         plan = plan if plan is not None else self.plan
-        ep, lp = plan.encoder, plan.llm
-        e_dur = np.zeros(len(items))
-        l_dur = np.zeros(len(items))
-        for i, it in enumerate(items):
-            b = it.encoder_batch()
-            s = it.llm_seq_len(self.tpm)
-            if self.perf.encoder is not None and ep is not None and b > 0:
-                d = self.perf.e_dur(b, ep.tp, self.mode) / max(ep.pp, 1)
-                if self.adaptive is not None:
-                    d = self.adaptive.correct("encoder", b, d)
-                if self.calibration is not None:
-                    d = self.calibration.correct("encoder", b, ep.tp, d)
-                e_dur[i] = d
-            d = self.perf.l_dur(s, lp.tp, self.mode) / max(lp.pp, 1)
-            if self.adaptive is not None:
-                d = self.adaptive.correct("llm", s, d)
-            if self.calibration is not None:
-                d = self.calibration.correct("llm", s, lp.tp, d)
-            l_dur[i] = d
-        return e_dur, l_dur
+        b = np.array([it.encoder_batch() for it in items], np.float64)
+        s = np.array([it.llm_seq_len(self.tpm) for it in items], np.float64)
+        return corrected_item_durations(self.perf, plan, b, s,
+                                        mode=self.mode,
+                                        adaptive=self.adaptive,
+                                        corrector=self.calibration)
 
     # ------------------------------------------------------------------ #
     def schedule(self, items: Sequence[DataItem]) -> ScheduleOutput:
         t0 = time.monotonic()
         plan = self.plan                 # capture once: hot-swap safe
         e_dur, l_dur = self.item_durations(items, plan)
-        m = plan.n_mb * plan.llm.dp
+        m = plan.n_buckets
         res = solve_makespan_bnb(e_dur, l_dur, m,
                                  time_limit_s=self.ilp_time_limit_s)
         if res.timed_out:
@@ -130,7 +122,7 @@ class OnlineMicrobatchScheduler:
         t0 = time.monotonic()
         plan = self.plan
         e_dur, l_dur = self.item_durations(items, plan)
-        m = plan.n_mb * plan.llm.dp
+        m = plan.n_buckets
         rng = np.random.default_rng(seed)
         perm = rng.permutation(len(items))
         groups: List[List[int]] = [[] for _ in range(m)]

@@ -13,6 +13,8 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Dict, Tuple
 
+import numpy as np
+
 from repro.core.scheduler.adaptive import AdaptiveCorrection
 
 
@@ -20,6 +22,16 @@ def shape_bucket(shape: float) -> int:
     """Shared log2 bucketing — delegates to AdaptiveCorrection.bucket so the
     two correctors can never bucket the same shape differently."""
     return AdaptiveCorrection.bucket(shape)
+
+
+def shape_bucket_array(shapes) -> np.ndarray:
+    """Vectorized `shape_bucket`.  Must implement the exact same
+    round-half-even log2 rule as `AdaptiveCorrection.bucket` (np.rint and
+    Python round() both round half to even) — the parity is pinned by
+    tests/test_objective.py::test_correct_array_matches_scalar_correct, so
+    change both or neither."""
+    shapes = np.asarray(shapes, dtype=np.float64)
+    return (2.0 ** np.rint(np.log2(np.maximum(shapes, 1.0)))).astype(np.int64)
 
 
 @dataclass
@@ -58,14 +70,50 @@ class OnlineCalibrator:
             cell.abs_err += a * (abs(r - 1.0) - cell.abs_err)
         cell.n += 1
 
-    def correct(self, module: str, shape: float, tp: int,
-                predicted: float) -> float:
-        cell = self.cells.get((module, shape_bucket(shape), int(tp)))
+    def _usable(self, module: str, bucket: int, tp: int):
+        cell = self.cells.get((module, bucket, int(tp)))
         if cell is None or cell.n < self.min_obs:
-            return predicted
+            return None
         if abs(cell.ratio - 1.0) < self.deadband:
-            return predicted
-        return predicted * cell.ratio
+            return None
+        return cell
+
+    def correct(self, module: str, shape: float, tp: int,
+                predicted: float, fallback_shape: float = None) -> float:
+        """fallback_shape: where to borrow a ratio when `shape`'s own
+        bucket was *never observed*.  The optimizer's mean-shape path asks
+        about aggregate bucket sizes the scheduler never predicts (and
+        hence the calibrator never observes); the per-item mean-shape
+        residual is the best available estimate there.  A bucket that has
+        been observed — even immature or inside the deadband — keeps its
+        own verdict.  Per-item callers (the scheduler) leave it unset."""
+        cell = self._usable(module, shape_bucket(shape), tp)
+        if (cell is None and fallback_shape is not None
+                and (module, shape_bucket(shape), int(tp)) not in self.cells):
+            cell = self._usable(module, shape_bucket(fallback_shape), tp)
+        return predicted if cell is None else predicted * cell.ratio
+
+    def correct_array(self, module: str, shapes, tp: int, predicted,
+                      fallback_shape: float = None) -> np.ndarray:
+        """Vectorized `correct` over parallel (shapes, predicted) arrays —
+        the Parallelism Optimizer's duration tables hold one entry per
+        k ∈ {1..GBS}, so refinement there must not pay a dict lookup per
+        scalar.  Buckets via the same round-log2 rule as `shape_bucket`."""
+        shapes = np.asarray(shapes, dtype=np.float64)
+        out = np.array(predicted, dtype=np.float64, copy=True)
+        if out.size == 0:
+            return out
+        fb_cell = None
+        if fallback_shape is not None:
+            fb_cell = self._usable(module, shape_bucket(fallback_shape), tp)
+        buckets = shape_bucket_array(shapes)
+        for b in np.unique(buckets):
+            cell = self._usable(module, int(b), tp)
+            if cell is None and (module, int(b), int(tp)) not in self.cells:
+                cell = fb_cell           # only truly unobserved buckets
+            if cell is not None:
+                out[buckets == b] *= cell.ratio
+        return out
 
     # ------------------------------------------------------------------ #
     def residual(self, module: str | None = None) -> float:

@@ -25,7 +25,7 @@ import threading
 from dataclasses import dataclass
 from typing import List, Optional, Sequence
 
-from repro.core.optimizer.makespan import expected_makespan, mean_makespan
+from repro.core.optimizer.objective import get_objective
 from repro.core.optimizer.search import ParallelismOptimizer, SearchResult
 from repro.core.profiling.data_profiler import ShapeDistribution
 from repro.core.scheduler.online import OnlineMicrobatchScheduler, ScheduleOutput
@@ -68,6 +68,7 @@ class RuntimeController:
         self.replan_n_trials = replan_n_trials
         self.replans: List[ReplanRecord] = []
         self.batch_idx = 0
+        self._replan_seed = 0     # varies per search; see _on_drift
         if calibration is not None:
             scheduler.calibration = calibration
         if engine.dist is not None:
@@ -158,29 +159,47 @@ class RuntimeController:
             dist = self.drift.window_distribution()
             if len(dist) == 0:
                 dist = self.engine.dist
+            # deterministic but distinct per firing: successive re-plans must
+            # not resample the exact Monte-Carlo batches of the last one.
+            self._replan_seed = self.batch_idx
             self._replan_future = self._pool.submit(self._search, dist, event)
+
+    def _objective(self):
+        """The engine's objective with the controller's re-plan trial
+        budget.  An engine-pinned `Objective` instance keeps its
+        configuration (quantile, solver, score) so re-plan decisions use
+        the same risk level the initial plan was chosen under — only
+        n_trials is overridden (get_objective copies, never mutates)."""
+        return get_objective(self.engine.objective,
+                             n_trials=self.replan_n_trials)
 
     def _search(self, dist: ShapeDistribution, event: DriftEvent):
         with self.trace.span("replan-search", cat="replan", tid=1,
                              kind=event.kind):
+            # The calibrator couples the loop: the background search ranks
+            # plans with the same refined durations the scheduler trusts.
             opt = ParallelismOptimizer(self.engine.cluster, self.engine.perf,
                                        mode=self.engine.mode,
-                                       objective=self.engine.objective,
-                                       n_trials=self.replan_n_trials)
+                                       objective=self._objective(),
+                                       calibrator=self.calibration,
+                                       seed=self._replan_seed)
             res = opt.search(dist, self.gbs)
-        return event, dist, res
+            # Score the incumbent here too: a sampling objective costs
+            # real CPU, and maybe_swap() runs on the training-loop thread.
+            # Only maybe_swap() mutates the plan and only one search is in
+            # flight, so the plan captured here is the one compared at the
+            # swap boundary.
+            stale = self._plan_makespan(self.scheduler.plan, dist)
+        return event, dist, res, stale
 
     def _plan_makespan(self, plan, dist: ShapeDistribution) -> float:
-        """Evaluate a plan on `dist` under the engine's search objective, so
+        """Evaluate a plan on `dist` under the engine's search objective —
+        same objective, same calibrator, same Monte-Carlo seed — so
         stale-vs-new comparisons are like-for-like with `res.makespan`."""
         eng = self.engine
-        if eng.objective == "expected" and len(dist):
-            return expected_makespan(eng.perf, plan, dist, self.gbs,
-                                     n_trials=self.replan_n_trials,
-                                     mode=eng.mode)
-        mean_bsz, mean_seq = dist.mean() if len(dist) else (1.0, 1.0)
-        return mean_makespan(eng.perf, plan, mean_bsz, mean_seq, self.gbs,
-                             eng.mode)
+        return self._objective().evaluate(
+            eng.perf, plan, dist, self.gbs, mode=eng.mode,
+            corrector=self.calibration, seed=self._replan_seed)
 
     def maybe_swap(self) -> bool:
         """Adopt a finished background re-plan (batch-boundary only)."""
@@ -190,14 +209,13 @@ class RuntimeController:
                 return False
             self._replan_future = None
         try:
-            event, dist, res = fut.result()
+            event, dist, res, stale = fut.result()
         except Exception as e:  # noqa: BLE001 — a failed background search
             # must not take down the training loop; the detector stays armed
             # and the next drift event retries.
             self.trace.instant("replan-error", cat="replan",
                                args={"error": f"{type(e).__name__}: {e}"})
             return False
-        stale = self._plan_makespan(self.scheduler.plan, dist)
         swapped = (res.found
                    and res.makespan < stale * (1.0 - self.min_improvement))
         if swapped:
