@@ -27,7 +27,7 @@ import numpy as np
 from repro.configs import get_config
 from repro.core.engine import DFLOPEngine
 from repro.core.optimizer.space import ClusterSpec, ModuleParallelism, ParallelismPlan
-from repro.core.pipeline.simulator import simulate_bucket_ranks
+from repro.core.pipeline.simulator import simulate_bucket_ranks_batch
 from repro.core.profiling.analytic import AnalyticBackend, V5E
 from repro.core.scheduler.online import OnlineMicrobatchScheduler
 from repro.data.synthetic import MixedDataset
@@ -83,29 +83,27 @@ def simulate_iteration(plan: ParallelismPlan,
     Bucket durations come from `ScheduleOutput.e_dur/l_dur` (already
     per-stage: the scheduler divides by the module's PP degree); the
     bucket→(mb, rank) layout, per-stage rows and fwd/bwd split live in
-    `simulate_bucket_ranks` — the same code path the search objectives
-    score with, so figures and objective predictions share one model."""
+    `simulate_bucket_ranks_batch` — the same code path the search
+    objectives score with, so figures and objective predictions share one
+    model.  All dp ranks are simulated in a single vectorized call (no op
+    recording — see `docs/simulator.md`)."""
     out = (sched.schedule_random(items, seed=seed) if random_assign
            else sched.schedule(items))
     n_mb, dp = plan.n_mb, plan.llm.dp
     e_dur, l_dur = out.e_dur, out.l_dur
     e_pp = plan.encoder.pp if plan.encoder else 0
-    p = e_pp + plan.llm.pp
     e_b = np.array([float(e_dur[g].sum()) if len(g) else 0.0
                     for g in out.groups])
     l_b = np.array([float(l_dur[g].sum()) if len(g) else 0.0
                     for g in out.groups])
-    step_time = 0.0
-    idle = busy = 0.0
-    stage_busy_acc = np.zeros(p)
-    for tr in simulate_bucket_ranks(e_b, l_b, n_mb=n_mb, dp=dp, e_pp=e_pp,
-                                    l_pp=plan.llm.pp,
-                                    bwd_over_fwd=BWD_OVER_FWD,
-                                    backward=(mode == "train")):
-        step_time = max(step_time, tr.makespan)
-        idle += tr.total_idle
-        busy += float(tr.stage_busy.sum())
-        stage_busy_acc += tr.stage_busy
+    ranks = simulate_bucket_ranks_batch(e_b, l_b, n_mb=n_mb, dp=dp,
+                                        e_pp=e_pp, l_pp=plan.llm.pp,
+                                        bwd_over_fwd=BWD_OVER_FWD,
+                                        backward=(mode == "train"))
+    step_time = float(ranks.makespan.max())
+    idle = float(ranks.total_idle.sum())
+    busy = float(ranks.stage_busy.sum())
+    stage_busy_acc = ranks.stage_busy.sum(axis=0)
     tokens = sum(it.llm_seq_len(sched.tpm) for it in items)
     # stage FLOPs (fwd+bwd) for Fig. 14 stage-throughput
     perf = sched.perf

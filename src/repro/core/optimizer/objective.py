@@ -190,14 +190,16 @@ class _SamplingObjective(Objective):
 
     score:
       * ``"simulate"`` (default) — hand each rank's buckets to the
-        discrete-event 1F1B simulator (buckets map to (mb, rank) slots the
+        event-driven 1F1B simulator (buckets map to (mb, rank) slots the
         way the data loader consumes `ScheduleOutput.groups`: bucket
         i·L_dp + r is microbatch i of rank r) and take the slowest rank.
-        This anchors the objective to `simulate_1f1b`: the closed formula
-        charges the fattest bucket to *every* pipeline slot, which badly
-        misprices fat-tailed batches where only one microbatch is fat.
-        Falls back to the closed formula above ``max_sim_buckets`` (at that
-        scale buckets are statistically smooth and the two agree).
+        This anchors the objective to the 1F1B simulator: the closed
+        formula charges the fattest bucket to *every* pipeline slot, which
+        badly misprices fat-tailed batches where only one microbatch is
+        fat.  All trials and ranks run in one `simulate_1f1b_batch`
+        wavefront call, so this holds at every GBS — there is no
+        large-GBS fallback to the closed form, and scores at different
+        GBS are always produced by the same estimator.
       * ``"pipeline"`` — the paper's closed form
         (N_mb + depth − 1) · C_max, i.e. exactly the scheduler's
         `ScheduleOutput.step_makespan`.  Monotone in C_max, which makes the
@@ -206,11 +208,10 @@ class _SamplingObjective(Objective):
     """
 
     def __init__(self, n_trials: int = 16, score: str = "simulate",
-                 bwd_over_fwd: float = 2.0, max_sim_buckets: int = 1024):
+                 bwd_over_fwd: float = 2.0):
         self.n_trials = n_trials
         self.score = score
         self.bwd_over_fwd = bwd_over_fwd
-        self.max_sim_buckets = max_sim_buckets
         self._validate()
 
     def _validate(self) -> None:
@@ -223,47 +224,73 @@ class _SamplingObjective(Objective):
             raise ValueError(f"n_trials must be >= 1, got {self.n_trials}")
 
     def _partition(self, e: np.ndarray, l: np.ndarray, m: int, rng):
-        """Return m index groups over the sampled batch."""
+        """Return m index groups over one sampled batch (per-trial path)."""
         raise NotImplementedError
+
+    def _partition_loads(self, e_s: np.ndarray, l_s: np.ndarray, m: int,
+                         seed: int) -> Tuple[np.ndarray, np.ndarray]:
+        """(T, gbs) sampled per-item durations → (T, m) per-bucket sums.
+
+        Default: loop `_partition` per trial (exact solvers and custom
+        subclasses).  The LPT and round-robin partitioners override this
+        with fully vectorized versions — the per-item Python loop, not the
+        simulator, is what made large-GBS re-ranks slow."""
+        T = e_s.shape[0]
+        e_b = np.zeros((T, m))
+        l_b = np.zeros((T, m))
+        for t in range(T):
+            rng_p = np.random.default_rng([seed, t, 1])
+            for j, g in enumerate(self._partition(e_s[t], l_s[t], m, rng_p)):
+                if len(g):
+                    e_b[t, j] = e_s[t][g].sum()
+                    l_b[t, j] = l_s[t][g].sum()
+        return e_b, l_b
 
     def _aggregate(self, samples: np.ndarray) -> float:
         raise NotImplementedError
 
-    def effective_score(self, gbs: int) -> str:
-        """Estimator actually used at this GBS.  The simulate→pipeline
-        fallback keys on GBS, not on a plan's own bucket count: every
-        candidate in a search satisfies N_mb·L_dp ≤ GBS, and the runtime
-        controller's stale-plan scoring shares the same GBS — so every
-        score that can ever be *compared* uses one estimator (the two
-        differ by up to ~35% on heterogeneous batches)."""
-        if self.score == "simulate" and gbs > self.max_sim_buckets:
-            return "pipeline"
-        return self.score
-
     # ------------------------------------------------------------------ #
+    def _score_trials(self, plan: ParallelismPlan, e_b: np.ndarray,
+                      l_b: np.ndarray, mode: str,
+                      score: Optional[str] = None) -> np.ndarray:
+        """(T, m) bucket-duration matrices → (T,) step makespans."""
+        score = score or self.score
+        e_pp = plan.encoder.pp if plan.encoder else 0
+        if score == "pipeline":
+            c = np.maximum(e_b, l_b).max(axis=-1)
+            return pipeline_makespan(plan.n_mb, e_pp, plan.llm.pp, c, c)
+        from repro.core.pipeline.simulator import simulate_bucket_ranks_batch
+        batch = simulate_bucket_ranks_batch(
+            e_b, l_b, n_mb=plan.n_mb, dp=plan.llm.dp, e_pp=e_pp,
+            l_pp=plan.llm.pp, bwd_over_fwd=self.bwd_over_fwd,
+            backward=(mode == "train"))
+        return batch.makespan.max(axis=-1)       # slowest dp rank per trial
+
     def trial_makespan(self, plan: ParallelismPlan, groups,
                        e: np.ndarray, l: np.ndarray,
                        mode: str = "train", score: Optional[str] = None) -> float:
-        """Step makespan of one partitioned batch.
-
-        An explicit `score` wins unconditionally — `evaluate_samples`
-        resolves the simulate→pipeline fallback once per GBS so all of a
-        comparison uses one estimator.  Only standalone calls (score=None)
-        apply the per-plan `max_sim_buckets` escape."""
-        m = plan.n_buckets
-        if score is None:
-            score = "pipeline" if m > self.max_sim_buckets else self.score
+        """Step makespan of one partitioned batch — the standalone entry
+        point (`evaluate_samples` scores whole trial batches at once via
+        `_score_trials`)."""
         e_b = np.array([e[g].sum() if len(g) else 0.0 for g in groups])
         l_b = np.array([l[g].sum() if len(g) else 0.0 for g in groups])
-        e_pp = plan.encoder.pp if plan.encoder else 0
-        if score == "pipeline":
-            c = float(np.maximum(e_b, l_b).max())
-            return pipeline_makespan(plan.n_mb, e_pp, plan.llm.pp, c, c)
-        from repro.core.pipeline.simulator import simulate_bucket_ranks
-        return max(tr.makespan for tr in simulate_bucket_ranks(
-            e_b, l_b, n_mb=plan.n_mb, dp=plan.llm.dp, e_pp=e_pp,
-            l_pp=plan.llm.pp, bwd_over_fwd=self.bwd_over_fwd,
-            backward=(mode == "train")))
+        return float(self._score_trials(plan, e_b[None], l_b[None], mode,
+                                        score)[0])
+
+    def _sample_indices(self, n: int, gbs: int, seed: int,
+                        cache: Optional[Dict]) -> np.ndarray:
+        """(T, gbs) item indices; per-trial streams so objectives sharing
+        `seed` sample identical batches regardless of how many draws their
+        partitioners use.  Plan-independent, hence shared across a whole
+        re-rank through `cache`."""
+        key = ("idx", n, gbs, seed, self.n_trials)
+        if cache is not None and key in cache:
+            return cache[key]
+        idx = np.stack([np.random.default_rng([seed, t]).integers(
+            0, n, size=gbs) for t in range(self.n_trials)])
+        if cache is not None:
+            cache[key] = idx
+        return idx
 
     def evaluate_samples(self, perf, plan, dist, gbs, *, mode="train",
                          corrector=None, seed: int = 0,
@@ -277,17 +304,10 @@ class _SamplingObjective(Objective):
         e_it, l_it = self._item_durations(perf, plan, dist, mode, corrector,
                                           cache)
         m = plan.n_buckets
-        score = self.effective_score(gbs)
-        samples = np.empty(self.n_trials)
-        for t in range(self.n_trials):
-            # per-trial streams: objectives sharing `seed` sample identical
-            # batches regardless of how many draws their partitioners use.
-            idx = np.random.default_rng([seed, t]).integers(0, n, size=gbs)
-            rng_p = np.random.default_rng([seed, t, 1])
-            e_s, l_s = e_it[idx], l_it[idx]
-            groups = self._partition(e_s, l_s, m, rng_p)
-            samples[t] = self.trial_makespan(plan, groups, e_s, l_s, mode,
-                                             score)
+        idx = self._sample_indices(n, gbs, seed, cache)
+        e_s, l_s = e_it[idx], l_it[idx]
+        e_b, l_b = self._partition_loads(e_s, l_s, m, seed)
+        samples = self._score_trials(plan, e_b, l_b, mode)
         return ObjectiveResult(self._aggregate(samples), samples)
 
 
@@ -307,6 +327,22 @@ class ExpectedRandomObjective(_SamplingObjective):
         for i, b in enumerate(buckets):
             groups[int(b)].append(i)
         return groups
+
+    def _partition_loads(self, e_s, l_s, m, seed):
+        # same rng stream as `_partition` (one permutation per trial), but
+        # bucket sums land via one bincount over all trials
+        T, gbs = e_s.shape
+        buckets = np.empty((T, gbs), dtype=np.int64)
+        deal = np.arange(gbs) % m
+        for t in range(T):
+            rng = np.random.default_rng([seed, t, 1])
+            buckets[t, rng.permutation(gbs)] = deal
+        flat = (np.arange(T)[:, None] * m + buckets).ravel()
+        e_b = np.bincount(flat, weights=e_s.ravel(),
+                          minlength=T * m).reshape(T, m)
+        l_b = np.bincount(flat, weights=l_s.ravel(),
+                          minlength=T * m).reshape(T, m)
+        return e_b, l_b
 
     def _aggregate(self, samples: np.ndarray) -> float:
         return float(samples.mean())
@@ -333,12 +369,12 @@ class BalancedQuantileObjective(_SamplingObjective):
     def __init__(self, n_trials: int = 16, q: float = 0.9,
                  solver: str = "lpt", refine: bool = False,
                  time_limit_s: float = 0.05, score: str = "simulate",
-                 bwd_over_fwd: float = 2.0, max_sim_buckets: int = 1024):
+                 bwd_over_fwd: float = 2.0):
         self.q = q
         self.solver = solver
         self.refine = refine
         self.time_limit_s = time_limit_s
-        super().__init__(n_trials, score, bwd_over_fwd, max_sim_buckets)
+        super().__init__(n_trials, score, bwd_over_fwd)
 
     def _validate(self) -> None:
         super()._validate()
@@ -355,6 +391,14 @@ class BalancedQuantileObjective(_SamplingObjective):
                                       time_limit_s=self.time_limit_s).groups
         from repro.core.scheduler.lpt import lpt_schedule
         return lpt_schedule(e, l, m, refine=self.refine)
+
+    def _partition_loads(self, e_s, l_s, m, seed):
+        if self.solver == "hybrid" or self.refine:
+            # exact / refining solvers stay per-trial
+            return super()._partition_loads(e_s, l_s, m, seed)
+        from repro.core.scheduler.lpt import lpt_assign_batch
+        _assign, e_b, l_b = lpt_assign_batch(e_s, l_s, m)
+        return e_b, l_b
 
     def _aggregate(self, samples: np.ndarray) -> float:
         return float(np.quantile(samples, self.q))

@@ -1,7 +1,19 @@
 from repro.core.pipeline.simulator import (
+    BatchPipelineTrace,
     PipelineTrace,
-    simulate_1f1b,
     ideal_bubble_fraction,
+    simulate_1f1b,
+    simulate_1f1b_batch,
+    simulate_bucket_ranks,
+    simulate_bucket_ranks_batch,
 )
 
-__all__ = ["PipelineTrace", "simulate_1f1b", "ideal_bubble_fraction"]
+__all__ = [
+    "BatchPipelineTrace",
+    "PipelineTrace",
+    "ideal_bubble_fraction",
+    "simulate_1f1b",
+    "simulate_1f1b_batch",
+    "simulate_bucket_ranks",
+    "simulate_bucket_ranks_batch",
+]

@@ -6,6 +6,22 @@ heterogeneous-cost generalization the paper studies.  Used to reproduce the
 idle-time analysis (Fig. 13), stage-throughput distributions (Fig. 14) and
 the end-to-end gains (Fig. 7) without hardware.
 
+Two implementations share one definition of the schedule:
+
+  * ``simulate_1f1b``       — the reference: a per-op event loop over one
+                              (p, m) instance, recording the op list.
+  * ``simulate_1f1b_batch`` — the production path: the same recurrence
+                              evaluated as a vectorized wavefront over a
+                              whole batch of instances at once (shape
+                              ``(..., p, m)``, batched across e.g.
+                              (trial, dp-rank)).  The search objectives and
+                              the benchmark harness score through this one;
+                              a property test pins it op-for-op to the
+                              reference (`tests/test_simulator.py`).
+
+See ``docs/simulator.md`` for the wavefront derivation and the bucket→rank
+convention.
+
 1F1B static order per stage s (0-based, p stages, m microbatches):
     warmup w_s = min(m, p - s) forwards, then alternate (bwd, fwd) until
     forwards are exhausted, then drain backwards.
@@ -14,10 +30,13 @@ Dependencies:
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import List, Sequence, Tuple
+from dataclasses import dataclass
+from functools import lru_cache
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
+
+Op = Tuple[str, int, int, float, float]          # (kind, stage, mb, t0, t1)
 
 
 @dataclass
@@ -25,7 +44,10 @@ class PipelineTrace:
     makespan: float
     stage_busy: np.ndarray           # (p,) total compute time per stage
     stage_idle: np.ndarray           # (p,) makespan - busy
-    ops: List[Tuple[str, int, int, float, float]]  # (kind, stage, mb, t0, t1)
+    # op list (kind, stage, mb, t0, t1); None when recording was disabled
+    # (the batched scoring path — see `record_ops`) so large runs don't
+    # allocate B·p·m Python tuples nobody reads.
+    ops: Optional[List[Op]] = None
 
     @property
     def total_idle(self) -> float:
@@ -42,29 +64,24 @@ class PipelineTrace:
 
 
 def simulate_1f1b(fwd: np.ndarray, bwd: np.ndarray | None = None) -> PipelineTrace:
-    """fwd/bwd: (p, m) per-stage per-microbatch durations (bwd default 2x)."""
+    """Reference event-loop simulator for one instance.
+
+    fwd/bwd: (p, m) per-stage per-microbatch durations (bwd default 2x).
+    Always records the op list — it is the ground truth the batched
+    implementation is property-tested against, and the entry point the
+    figure scripts use when they need per-op spans.
+    """
     fwd = np.asarray(fwd, dtype=np.float64)
     p, m = fwd.shape
     bwd = 2.0 * fwd if bwd is None else np.asarray(bwd, dtype=np.float64)
 
-    # static 1F1B op order per stage
-    orders: List[List[Tuple[str, int]]] = []
-    for s in range(p):
-        w = min(m, p - s)
-        seq: List[Tuple[str, int]] = [("F", i) for i in range(w)]
-        nf, nb = w, 0
-        while nf < m:
-            seq.append(("B", nb)); nb += 1
-            seq.append(("F", nf)); nf += 1
-        while nb < m:
-            seq.append(("B", nb)); nb += 1
-        orders.append(seq)
+    orders = _static_orders(p, m)
 
     f_end = np.full((p, m), -1.0)
     b_end = np.full((p, m), -1.0)
     stage_t = np.zeros(p)
     ptr = [0] * p
-    ops: List[Tuple[str, int, int, float, float]] = []
+    ops: List[Op] = []
 
     remaining = sum(len(o) for o in orders)
     progress = True
@@ -100,15 +117,238 @@ def simulate_1f1b(fwd: np.ndarray, bwd: np.ndarray | None = None) -> PipelineTra
     return PipelineTrace(makespan, busy, idle, ops)
 
 
+# --------------------------------------------------------------------- #
+# batched wavefront implementation
+# --------------------------------------------------------------------- #
+@lru_cache(maxsize=None)
+def _static_orders(p: int, m: int) -> Tuple[Tuple[Tuple[str, int], ...], ...]:
+    """The 1F1B static op order of every stage, built once per (p, m)."""
+    orders = []
+    for s in range(p):
+        w = min(m, p - s)
+        seq: List[Tuple[str, int]] = [("F", i) for i in range(w)]
+        nf, nb = w, 0
+        while nf < m:
+            seq.append(("B", nb)); nb += 1
+            seq.append(("F", nf)); nf += 1
+        while nb < m:
+            seq.append(("B", nb)); nb += 1
+        orders.append(tuple(seq))
+    return tuple(orders)
+
+
+@lru_cache(maxsize=None)
+def _wavefront_order(p: int, m: int) -> Tuple[Tuple[int, bool, int], ...]:
+    """A topological order of the 1F1B op DAG, shared by every instance of
+    shape (p, m) — the durations never change the *structure*, only the
+    times, which is what makes the batched evaluation possible.
+
+    Walk op positions j = 0..2m−1 in lockstep across stages ("passes").
+    Within the static order, the cross-stage dependency of the op at
+    position j always sits at position j−1 or j of its neighbour stage:
+
+      * F[s, i] ← F[s−1, i]: same position during warmup (both stages are
+        in their first w ops), one earlier in steady state — so passes with
+        j < m (where every same-position dependency is a warmup forward)
+        resolve stage 0 first;
+      * B[s, i] ← B[s+1, i]: one earlier in steady state, same position in
+        the drain (which only occupies positions j ≥ m) — so those passes
+        resolve the last stage first.
+
+    Hence: pass j < m walks stages top-down, pass j ≥ m bottom-up, and
+    every dependency is evaluated before its dependent.
+    """
+    orders = _static_orders(p, m)
+    topo: List[Tuple[int, bool, int]] = []
+    for j in range(2 * m):
+        stages = range(p) if j < m else range(p - 1, -1, -1)
+        for s in stages:
+            kind, i = orders[s][j]
+            topo.append((s, kind == "F", i))
+    return tuple(topo)
+
+
+@dataclass
+class BatchPipelineTrace:
+    """Vectorized `PipelineTrace` over a batch of (p, m) instances.
+
+    All arrays carry the input's leading batch shape ``lead`` (e.g.
+    ``(n_trials, dp)``): makespan is ``lead``, stage_busy/stage_idle are
+    ``lead + (p,)``.  Op start/end times are only materialized under
+    ``record_ops=True`` as four ``lead + (p, m)`` arrays — never as
+    per-op Python tuples.
+    """
+    makespan: np.ndarray
+    stage_busy: np.ndarray
+    stage_idle: np.ndarray
+    f_start: Optional[np.ndarray] = None
+    f_end: Optional[np.ndarray] = None
+    b_start: Optional[np.ndarray] = None
+    b_end: Optional[np.ndarray] = None
+
+    @property
+    def total_idle(self) -> np.ndarray:
+        return self.stage_idle.sum(axis=-1)
+
+    @property
+    def idle_fraction(self) -> np.ndarray:
+        p = self.stage_busy.shape[-1]
+        return self.total_idle / np.maximum(p * self.makespan, 1e-12)
+
+    def trace(self, index) -> PipelineTrace:
+        """Scalar view of one instance (index into the leading batch
+        shape).  Ops, when recorded, come back in static per-stage order
+        rather than global start-time order."""
+        ops = None
+        if self.f_end is not None:
+            p, m = self.f_end[index].shape
+            ops = []
+            for s, order in enumerate(_static_orders(p, m)):
+                for kind, i in order:
+                    t0s, t1s = ((self.f_start, self.f_end) if kind == "F"
+                                else (self.b_start, self.b_end))
+                    ops.append((kind, s, i, float(t0s[index][s, i]),
+                                float(t1s[index][s, i])))
+        return PipelineTrace(float(self.makespan[index]),
+                             self.stage_busy[index],
+                             self.stage_idle[index], ops)
+
+
+def simulate_1f1b_batch(fwd: np.ndarray, bwd: np.ndarray | None = None,
+                        *, record_ops: bool = False) -> BatchPipelineTrace:
+    """Vectorized 1F1B simulation of a whole batch of instances.
+
+    fwd/bwd: ``(..., p, m)`` per-stage per-microbatch durations (bwd
+    default 2×fwd); the leading axes are independent instances — e.g.
+    ``(n_trials, dp)`` when scoring Monte-Carlo trials across data-parallel
+    ranks.  One call replaces ``prod(lead)`` reference-loop runs: the op
+    DAG is identical for every instance, so each node of the cached
+    wavefront order (`_wavefront_order`) is evaluated as a single
+    max/add over the batch axis.  Start/end times equal the reference's
+    bit-for-bit (same max/add, same association).
+
+    >>> import numpy as np
+    >>> fwd = np.ones((3, 2, 4))                  # 3 instances, p=2, m=4
+    >>> tr = simulate_1f1b_batch(fwd)             # bwd defaults to 2*fwd
+    >>> tr.makespan.shape
+    (3,)
+    >>> float(tr.makespan[0])                     # (m + p - 1) * 3
+    15.0
+    """
+    fwd = np.asarray(fwd, dtype=np.float64)
+    if fwd.ndim < 2:
+        raise ValueError(f"fwd must be (..., p, m), got shape {fwd.shape}")
+    lead = fwd.shape[:-2]
+    p, m = fwd.shape[-2:]
+    bwd = 2.0 * fwd if bwd is None else np.asarray(bwd, dtype=np.float64)
+    if bwd.shape != fwd.shape:
+        raise ValueError(f"bwd shape {bwd.shape} != fwd shape {fwd.shape}")
+    fwd2 = np.ascontiguousarray(fwd.reshape((-1, p, m)))
+    bwd2 = np.ascontiguousarray(bwd.reshape((-1, p, m)))
+    # (p, m, B) layout: each op's batch vector is contiguous
+    F = np.ascontiguousarray(np.moveaxis(fwd2, 0, -1))
+    W = np.ascontiguousarray(np.moveaxis(bwd2, 0, -1))
+    B = F.shape[-1]
+
+    f_end = np.zeros((p, m, B))
+    b_end = np.zeros((p, m, B))
+    stage_t = np.zeros((p, B))
+    rec = (np.zeros((2, 2, p, m, B)) if record_ops else None)  # [F/B][t0/t1]
+
+    for s, is_f, i in _wavefront_order(p, m):
+        if is_f:
+            if s > 0:
+                t0 = np.maximum(stage_t[s], f_end[s - 1, i])
+            else:
+                t0 = stage_t[s].copy()
+            t1 = t0 + F[s, i]
+            f_end[s, i] = t1
+        else:
+            dep = b_end[s + 1, i] if s < p - 1 else f_end[s, i]
+            t0 = np.maximum(stage_t[s], dep)
+            t1 = t0 + W[s, i]
+            b_end[s, i] = t1
+        stage_t[s] = t1
+        if rec is not None:
+            rec[0 if is_f else 1, :, s, i] = (t0, t1)
+
+    makespan = b_end.reshape((p * m, B)).max(axis=0).reshape(lead)
+    # summed over the contiguous m axis of the (B, p, m) layout, separately
+    # per phase, so the float association (numpy's pairwise reduction)
+    # matches the reference's fwd.sum(axis=1) + bwd.sum(axis=1) bit-for-bit
+    busy = (fwd2.sum(axis=-1) + bwd2.sum(axis=-1)).reshape(lead + (p,))
+    idle = makespan[..., None] - busy
+
+    def _times(a):
+        return np.moveaxis(a, -1, 0).reshape(lead + (p, m))
+
+    return BatchPipelineTrace(
+        makespan, busy, idle,
+        f_start=_times(rec[0, 0]) if record_ops else None,
+        f_end=_times(rec[0, 1]) if record_ops else None,
+        b_start=_times(rec[1, 0]) if record_ops else None,
+        b_end=_times(rec[1, 1]) if record_ops else None)
+
+
+# --------------------------------------------------------------------- #
+# scheduler-bucket → pipeline-rank convention
+# --------------------------------------------------------------------- #
+def bucket_rank_durations(e_b: np.ndarray, l_b: np.ndarray, *, n_mb: int,
+                          dp: int, e_pp: int, l_pp: int) -> np.ndarray:
+    """Scheduler bucket durations → per-rank stage rows, vectorized.
+
+    e_b/l_b: ``(..., n_mb · dp)`` per-bucket encoder/LLM durations (already
+    per-stage, i.e. divided by the module's PP degree).  Returns
+    ``(..., dp, p, n_mb)`` rows where ``p = e_pp + l_pp``: bucket
+    ``i·dp + r`` is microbatch i of data-parallel rank r (the order the
+    data loader consumes `ScheduleOutput.groups`), each encoder stage takes
+    the bucket's encoder value and each LLM stage its LLM value.
+    """
+    e_b = np.asarray(e_b, dtype=np.float64)
+    l_b = np.asarray(l_b, dtype=np.float64)
+    lead = l_b.shape[:-1]
+    p = e_pp + l_pp
+    rows = np.empty(lead + (dp, p, n_mb))
+    # (..., n_mb·dp) → (..., n_mb, dp) → (..., dp, n_mb); broadcast over
+    # the module's stages
+    l_ri = np.moveaxis(l_b.reshape(lead + (n_mb, dp)), -1, -2)
+    rows[..., e_pp:, :] = l_ri[..., None, :]
+    if e_pp:
+        e_ri = np.moveaxis(e_b.reshape(lead + (n_mb, dp)), -1, -2)
+        rows[..., :e_pp, :] = e_ri[..., None, :]
+    return rows
+
+
+def simulate_bucket_ranks_batch(e_b: np.ndarray, l_b: np.ndarray, *,
+                                n_mb: int, dp: int, e_pp: int, l_pp: int,
+                                bwd_over_fwd: float = 2.0,
+                                backward: bool = True,
+                                record_ops: bool = False) -> BatchPipelineTrace:
+    """Batched 1F1B traces for scheduler buckets; see `simulate_bucket_ranks`
+    for the convention.  e_b/l_b may carry leading batch axes (e.g. one per
+    Monte-Carlo trial); the result's batch shape is ``lead + (dp,)`` and
+    the slowest rank per instance is ``out.makespan.max(axis=-1)``.
+    """
+    rows = bucket_rank_durations(e_b, l_b, n_mb=n_mb, dp=dp, e_pp=e_pp,
+                                 l_pp=l_pp)
+    if backward:
+        fwd = rows / (1.0 + bwd_over_fwd)
+        bwd = bwd_over_fwd * fwd
+    else:
+        fwd, bwd = rows, 0.0 * rows
+    return simulate_1f1b_batch(fwd, bwd, record_ops=record_ops)
+
+
 def simulate_bucket_ranks(e_b: np.ndarray, l_b: np.ndarray, *, n_mb: int,
                           dp: int, e_pp: int, l_pp: int,
-                          bwd_over_fwd: float = 2.0, backward: bool = True):
+                          bwd_over_fwd: float = 2.0, backward: bool = True,
+                          record_ops: bool = False):
     """Per-rank 1F1B traces for m = n_mb · dp scheduler buckets.
 
     This is THE convention shared by the search objectives
-    (`objective._SamplingObjective.trial_makespan`) and the benchmark
-    harness (`benchmarks.common.simulate_iteration`) — keep it in one
-    place so predicted and "ground truth" simulations can never drift:
+    (`objective._SamplingObjective`) and the benchmark harness
+    (`benchmarks.common.simulate_iteration`) — keep it in one place so
+    predicted and "ground truth" simulations can never drift:
 
       * bucket i·dp + r is microbatch i of data-parallel rank r (the order
         the data loader consumes `ScheduleOutput.groups`);
@@ -119,24 +359,22 @@ def simulate_bucket_ranks(e_b: np.ndarray, l_b: np.ndarray, *, n_mb: int,
         reproduces the closed form (n_mb + p − 1) · c); without, they are
         forward-only.
 
-    Yields one `PipelineTrace` per rank.
+    Yields one `PipelineTrace` per rank (all dp ranks are simulated in a
+    single `simulate_1f1b_batch` call; per-op spans only with
+    `record_ops=True`).
     """
-    p = e_pp + l_pp
+    batch = simulate_bucket_ranks_batch(
+        e_b, l_b, n_mb=n_mb, dp=dp, e_pp=e_pp, l_pp=l_pp,
+        bwd_over_fwd=bwd_over_fwd, backward=backward, record_ops=record_ops)
     for r in range(dp):
-        rows = np.empty((p, n_mb))
-        for i in range(n_mb):
-            b = i * dp + r
-            rows[:e_pp, i] = e_b[b]
-            rows[e_pp:, i] = l_b[b]
-        if backward:
-            fwd = rows / (1.0 + bwd_over_fwd)
-            bwd = bwd_over_fwd * fwd
-        else:
-            fwd, bwd = rows, 0.0 * rows
-        yield simulate_1f1b(fwd, bwd)
+        yield batch.trace(r)
 
 
 def ideal_bubble_fraction(p: int, m: int) -> float:
     """Theoretical 1F1B bubble (p−1)/m ... /(m + p − 1) of the makespan for
-    homogeneous microbatches (paper cites (p−1)/m [Megatron])."""
+    homogeneous microbatches (paper cites (p−1)/m [Megatron]).
+
+    >>> ideal_bubble_fraction(4, 12)
+    0.2
+    """
     return (p - 1) / (m + p - 1)

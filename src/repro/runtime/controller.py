@@ -17,6 +17,13 @@ Wraps a `DFLOPEngine` and its `OnlineMicrobatchScheduler`:
 The swap is deliberately confined to batch boundaries: `schedule()` polls
 the background future before scheduling, so in-flight microbatches always
 complete under the plan they were balanced for.
+
+Background searches score candidates (and the stale incumbent — same
+objective, same calibrator, same seed) through the batched Monte-Carlo
+path: per candidate, one vectorized LPT partition and one
+`simulate_1f1b_batch` wavefront over every (trial, dp-rank) instance, at
+any GBS — which is what keeps high-frequency re-planning affordable
+(docs/simulator.md).
 """
 from __future__ import annotations
 

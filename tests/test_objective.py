@@ -273,7 +273,7 @@ def test_pipeline_score_upper_bounds_simulate():
         rs = sim.evaluate_samples(c["perf"], plan, c["dist"], gbs, seed=2)
         assert np.all(rs.samples <= rp.samples * (1 + 1e-9))
         # balanced buckets keep the envelope tight — the closed form stays
-        # a usable surrogate at scale (max_sim_buckets fallback)
+        # a usable scoring mode for the dominance property harness
         assert np.all(rp.samples <= rs.samples * 1.35)
     deg = ShapeDistribution(np.zeros(3), np.full(3, 1024.0))
     plan = llm_plan(2, 2, 2, 2)
@@ -488,6 +488,40 @@ def test_objective_instance_accepted_by_optimizer_and_engine():
 # --------------------------------------------------------------------- #
 # regression: the small-GBS fig16 failure mode (the bug this PR fixes)
 # --------------------------------------------------------------------- #
+@pytest.mark.slow
+def test_large_gbs_rerank_simulates_and_stays_sharp():
+    """GBS 2048 smoke (the regime the old `max_sim_buckets` fallback
+    scored with the homogeneous closed form): the balanced-quantile search
+    must complete with the batched simulate estimator — no fallback
+    remains — and its pick's simulated p90 step makespan must not regress
+    against the mean objective's pick."""
+    from benchmarks.common import POD_CLUSTER, engine_for
+    from benchmarks.fig17_objective import MIXTURE, evaluate_plan
+
+    # the fallback (and its knob) are gone: every GBS uses one estimator
+    assert not hasattr(BalancedQuantileObjective(), "max_sim_buckets")
+    assert not hasattr(BalancedQuantileObjective(), "effective_score")
+
+    gbs = 2048
+    eng = engine_for("llava-ov-llama8b", POD_CLUSTER, mixture=MIXTURE, seed=0)
+    picks = {}
+    for obj in ("mean", "balanced-quantile"):
+        opt = ParallelismOptimizer(eng.cluster, eng.perf, mode=eng.mode,
+                                   objective=obj, n_trials=16,
+                                   refine_expected_top_k=8)
+        res = opt.search(eng.dist, gbs)
+        assert res.found
+        picks[obj] = res.plan
+    sims = {obj: evaluate_plan(eng, plan, gbs, n_eval=6)
+            for obj, plan in picks.items()}
+    bq_p90 = np.quantile(sims["balanced-quantile"], 0.9)
+    mean_p90 = np.quantile(sims["mean"], 0.9)
+    # at this scale the objectives have converged (fig17): the guard is
+    # "no score regression beyond simulation sampling noise", not strict
+    # dominance — that is the GBS-16 test below
+    assert bq_p90 <= mean_p90 * 1.05, (picks, bq_p90, mean_p90)
+
+
 @pytest.mark.slow
 def test_small_gbs_balanced_pick_not_worse_than_mean_pick_simulated():
     """GBS 16, fat-tailed video-heavy mixture, pod scale: the mean-shape

@@ -6,7 +6,8 @@ import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.core.scheduler.ilp import solve_makespan_bnb
-from repro.core.scheduler.lpt import cmax, lower_bound, lpt_schedule
+from repro.core.scheduler.lpt import (cmax, lower_bound, lpt_assign_batch,
+                                      lpt_schedule)
 
 durations = st.lists(
     st.tuples(st.floats(0.0, 10.0), st.floats(0.0, 10.0)),
@@ -29,6 +30,63 @@ def test_lpt_partition_invariants(pairs, m):
     assert flat == list(range(len(e)))
     # objective within Graham-style bound of the lower bound
     assert cmax(e, l, groups) <= 2.0 * lower_bound(e, l, m) + 1e-9
+
+
+@given(st.lists(durations, min_size=1, max_size=3), st.integers(1, 6),
+       st.integers(0, 100))
+@settings(max_examples=60, deadline=None)
+def test_lpt_assign_batch_matches_per_trial(rows_pairs, m, seed):
+    """The vectorized-over-trials LPT (the search objectives' hot path)
+    must reproduce `lpt_schedule(refine=False)` assignment-for-assignment,
+    and its load matrices must equal the per-bucket duration sums."""
+    rng = np.random.default_rng(seed)
+    n = max(len(p) for p in rows_pairs)
+    T = len(rows_pairs)
+    e = rng.uniform(0.0, 10.0, (T, n))
+    l = rng.uniform(0.01, 10.0, (T, n))
+    for t, pairs in enumerate(rows_pairs):     # overlay hypothesis values
+        for i, (pe, pl) in enumerate(pairs):
+            e[t, i] = pe
+            l[t, i] = pl
+    assign, loads_e, loads_l = lpt_assign_batch(e, l, m)
+    for t in range(T):
+        want = np.empty(n, dtype=np.int64)
+        for j, g in enumerate(lpt_schedule(e[t], l[t], m, refine=False)):
+            for i in g:
+                want[i] = j
+        np.testing.assert_array_equal(assign[t], want)
+        for j in range(m):
+            sel = assign[t] == j
+            np.testing.assert_allclose(loads_e[t, j], e[t][sel].sum(),
+                                       rtol=1e-12, atol=1e-12)
+            np.testing.assert_allclose(loads_l[t, j], l[t][sel].sum(),
+                                       rtol=1e-12, atol=1e-12)
+
+
+def test_lpt_assign_batch_matches_per_trial_deterministic():
+    """Shim-proof variant: random heterogeneous rows, plus the edge cases
+    the vectorized head-prefill must handle (zero LLM durations disable
+    it, n < m leaves buckets empty, duplicate durations tie)."""
+    rng = np.random.default_rng(11)
+    cases = []
+    for T, n, m in [(1, 1, 1), (3, 40, 7), (2, 5, 9), (4, 64, 64)]:
+        e = rng.uniform(0.0, 10.0, (T, n))
+        l = rng.uniform(0.01, 10.0, (T, n))
+        cases.append((e, l, m))
+    e, l, m = cases[1]
+    z = e.copy(), l.copy()
+    z[1][:, 3] = 0.0                              # a zero-LLM item
+    cases.append((z[0], z[1], m))
+    dup = np.full((2, 12), 2.0)
+    cases.append((0.0 * dup, dup, 5))             # all items identical
+    for e, l, m in cases:
+        assign, loads_e, loads_l = lpt_assign_batch(e, l, m)
+        for t in range(len(e)):
+            want = np.empty(e.shape[1], dtype=np.int64)
+            for j, g in enumerate(lpt_schedule(e[t], l[t], m, refine=False)):
+                for i in g:
+                    want[i] = j
+            np.testing.assert_array_equal(assign[t], want)
 
 
 @given(durations, st.integers(1, 4))

@@ -1,0 +1,102 @@
+#!/usr/bin/env python
+"""Docs health check: internal links + docstring examples.
+
+Two passes, both dependency-free:
+
+  1. every relative markdown link in README.md, docs/*.md and
+     benchmarks/README.md must resolve to a file in the repo (http(s)
+     links are not fetched), and the documented entry points must exist;
+  2. ``doctest`` runs over the modules listed in ``DOCTEST_MODULES``
+     (docstring examples are part of the docs — they must execute).
+
+Run from the repo root:  python tools/check_docs.py
+CI runs this in the ``docs`` job (.github/workflows/ci.yml).
+"""
+from __future__ import annotations
+
+import doctest
+import importlib
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+# markdown files whose links must resolve
+DOC_FILES = (
+    [REPO / "README.md", REPO / "benchmarks" / "README.md"]
+    + sorted((REPO / "docs").glob("*.md"))
+)
+
+# files the docs system itself promises exist
+REQUIRED = [
+    "docs/ARCHITECTURE.md",
+    "docs/simulator.md",
+    "docs/objectives.md",
+    "benchmarks/README.md",
+]
+
+# modules whose docstring examples must pass (keep in sync with the
+# modules that carry ``>>>`` examples)
+DOCTEST_MODULES = [
+    "repro.core.pipeline.simulator",
+    "repro.core.optimizer.makespan",
+]
+
+# [text](target) — excluding images; target split from an optional title
+_LINK = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+
+
+def check_links() -> list:
+    errors = []
+    for req in REQUIRED:
+        if not (REPO / req).is_file():
+            errors.append(f"missing required doc: {req}")
+    for md in DOC_FILES:
+        if not md.is_file():
+            errors.append(f"doc file listed but absent: {md}")
+            continue
+        text = md.read_text(encoding="utf-8")
+        for target in _LINK.findall(text):
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:                      # pure in-page anchor
+                continue
+            resolved = (md.parent / path).resolve()
+            if not resolved.exists():
+                errors.append(
+                    f"{md.relative_to(REPO)}: broken link -> {target}")
+    return errors
+
+
+def run_doctests() -> list:
+    sys.path.insert(0, str(REPO / "src"))
+    errors = []
+    for name in DOCTEST_MODULES:
+        try:
+            mod = importlib.import_module(name)
+        except Exception as exc:              # pragma: no cover
+            errors.append(f"doctest: cannot import {name}: {exc!r}")
+            continue
+        result = doctest.testmod(mod)
+        if result.failed:
+            errors.append(f"doctest: {result.failed} failure(s) in {name}")
+        print(f"doctest {name}: {result.attempted} example(s), "
+              f"{result.failed} failed")
+    return errors
+
+
+def main() -> int:
+    errors = check_links() + run_doctests()
+    for e in errors:
+        print(f"ERROR: {e}", file=sys.stderr)
+    n_links = sum(1 for _ in DOC_FILES)
+    if not errors:
+        print(f"docs OK: {n_links} markdown files link-checked, "
+              f"{len(DOCTEST_MODULES)} modules doctested")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
