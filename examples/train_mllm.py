@@ -6,11 +6,15 @@ Scheduling runs through the `repro.runtime` control loop: every step's
 wall time feeds back into calibration + drift detection, and `--trace`
 exports a Chrome trace (load in https://ui.perfetto.dev) of the run.
 `--replan` additionally lets the controller re-plan in the background and
-hot-swap θ* when the data distribution drifts (here the plan is pinned
-tiny for single-host training, so swaps mainly demonstrate the mechanics).
+hot-swap θ* when the data distribution drifts — and the swap is
+*physical*: the live (params, opt) pytree is threaded through a
+`repro.launch.reshard.ParamSwapper`, so an adopted plan re-lays-out the
+training state on device (clamped onto however many local devices exist)
+and the reshard lands in the trace and metrics.  `--shift-at K` switches
+the data mixture single-image → video at step K to force a mid-run drift.
 
     PYTHONPATH=src python examples/train_mllm.py [--steps 200] [--random]
-        [--trace runtime_trace.json] [--replan]
+        [--trace runtime_trace.json] [--replan] [--shift-at 8]
 """
 import argparse
 import time
@@ -23,6 +27,8 @@ from repro.common.types import MLLMConfig, ModalityStub, ModelConfig
 from repro.core.engine import DFLOPEngine
 from repro.core.optimizer.space import ClusterSpec, ModuleParallelism, ParallelismPlan
 from repro.data.synthetic import MixedDataset
+from repro.launch.reshard import ParamSwapper, clamped_plan_mesh
+from repro.runtime import DriftDetector
 from repro.models import mllm as mllm_lib
 from repro.models.model import FwdCtx
 from repro.train import checkpoint
@@ -46,7 +52,7 @@ MAX_MEDIA = 8 * 16       # encoder tokens cap
 MAX_TEXT = 384
 
 
-def build_batches(ds, plan, items, groups, n_mb):
+def build_batches(ds, plan, items, groups, n_mb, vocab_size=LLM.vocab_size):
     """Tensorize scheduler groups -> (n_mb, rows, ...) MLLM batch."""
     dp = plan.llm.dp
     rows = []
@@ -55,15 +61,35 @@ def build_batches(ds, plan, items, groups, n_mb):
         for r in range(dp):
             row_items += [items[j] for j in groups[i * dp + r]]
         rows.append(row_items or [items[0]])
+    # pad rows to a power of two so batch shapes (and therefore jit
+    # compilations) stay stable across steps; XLA CPU recompiles cost
+    # minutes at this model size
     per_row = max(len(r) for r in rows)
+    per_row = 1 << (per_row - 1).bit_length()
     batches = []
     for row_items in rows:
-        row_items = (row_items + row_items)[:per_row]
+        row_items = (row_items * per_row)[:per_row]
         batches.append(ds.materialize(row_items, embed_dim=64,
-                                      vocab_size=LLM.vocab_size,
+                                      vocab_size=vocab_size,
                                       max_media=MAX_MEDIA, max_text=MAX_TEXT))
     return {k: jnp.asarray(np.stack([b[k] for b in batches]))
             for k in batches[0]}
+
+
+def tiny_configs():
+    """Sub-1M-param variant for smoke tests: compiles in seconds on CPU
+    while exercising the identical control-loop + reshard code paths."""
+    enc = ModelConfig(name="enc-tiny", family="vlm-enc", n_layers=2,
+                      d_model=96, n_heads=4, n_kv_heads=4, d_ff=384,
+                      vocab_size=0, causal=False, use_rope=False,
+                      input_embed_dim=64, has_lm_head=False, dtype="float32")
+    llm = ModelConfig(name="llm-tiny", family="dense", n_layers=2,
+                      d_model=128, n_heads=4, n_kv_heads=2, d_ff=512,
+                      vocab_size=1024, dtype="float32")
+    mcfg = MLLMConfig(name="mllm-tiny", encoder=enc, llm=llm,
+                      stub=ModalityStub("vision", 16, 64),
+                      connector_hidden=128, tokens_per_item_out=4)
+    return enc, llm, mcfg
 
 
 def main():
@@ -75,45 +101,81 @@ def main():
     ap.add_argument("--trace", default="",
                     help="export a Chrome trace of the run to this path")
     ap.add_argument("--replan", action="store_true",
-                    help="enable background re-planning on drift")
+                    help="enable background re-planning on drift, with "
+                         "physical param resharding on plan hot-swap")
+    ap.add_argument("--shift-at", type=int, default=0,
+                    help="switch the data mixture single-image -> video at "
+                         "this step (0 = keep the mixed stream)")
     ap.add_argument("--objective", default="mean",
                     choices=["mean", "expected-random", "balanced-quantile"],
                     help="search objective used by background re-planning")
+    ap.add_argument("--tiny", action="store_true",
+                    help="sub-1M-param model (CI smoke: compiles in "
+                         "seconds, same control-loop code paths)")
     args = ap.parse_args()
+    if args.random and args.replan:
+        ap.error("--random bypasses the control loop (schedule_random "
+                 "never reaches the controller), so --replan would only "
+                 "adopt plans at exit; drop one of the two flags")
 
-    ds = MixedDataset("mixed", seed=0, tokens_per_media_item=TPM)
-    eng = DFLOPEngine(llm_cfg=LLM, enc_cfg=ENC, e_seq_len=16,
+    enc_cfg, llm_cfg, mcfg = tiny_configs() if args.tiny else (ENC, LLM, MCFG)
+    if args.shift_at:
+        ds = MixedDataset("single_image", seed=0, tokens_per_media_item=TPM)
+        post_ds = MixedDataset("video", seed=1, tokens_per_media_item=TPM)
+    else:
+        ds = MixedDataset("mixed", seed=0, tokens_per_media_item=TPM)
+        post_ds = None
+    eng = DFLOPEngine(llm_cfg=llm_cfg, enc_cfg=enc_cfg, e_seq_len=16,
                       cluster=ClusterSpec(n_chips=16, chips_per_node=16),
                       tokens_per_media_item=TPM,
                       objective=args.objective)
     eng.profile(ds)
     plan = ParallelismPlan(llm=ModuleParallelism(1, 1, 1),
                            encoder=ModuleParallelism(1, 1, 1), n_mb=4)
-    ctl = eng.runtime(GBS, plan=plan, adaptive=True, ilp_time_limit_s=0.05,
-                      auto_replan=args.replan)
-    sched = ctl.scheduler
 
-    params = mllm_lib.init(jax.random.PRNGKey(0), MCFG)
+    params = mllm_lib.init(jax.random.PRNGKey(0), mcfg)
     opt = adamw_init(params)
     n_params = sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(params))
-    print(f"[model] {n_params/1e6:.1f}M params")
+    print(f"[model] {n_params/1e6:.1f}M params  "
+          f"devices={jax.device_count()}")
+
+    # The controller reaches the live (params, opt) state through this
+    # holder: a plan hot-swap physically re-lays-out both (optimizer state
+    # moves with the parameters) on the plan's mesh, clamped onto the
+    # local devices.
+    live = {"state": (params, opt)}
+    swapper = ParamSwapper(lambda: live["state"],
+                           lambda s: live.update(state=s),
+                           mesh_factory=clamped_plan_mesh)
+    # tighter drift window than the default so a --shift-at demo fires
+    # within a few global batches at GBS 16
+    drift = DriftDetector(window=128, check_every=32, cooldown=64)
+    ctl = eng.runtime(GBS, plan=plan, adaptive=True, ilp_time_limit_s=0.05,
+                      auto_replan=args.replan, drift=drift,
+                      param_swapper=swapper)
+    sched = ctl.scheduler
+
     lr_fn = cosine_lr(1e-3, warmup=20, total=args.steps)
     step = jax.jit(make_train_step(
-        MCFG, AdamWConfig(lr=1e-3),
+        mcfg, AdamWConfig(lr=1e-3),
         ctx=FwdCtx(mode="train", attn_impl="chunked")))
 
     losses, pred_cmax = [], []
     t0 = time.time()
     for k in range(args.steps):
-        items = ds.sample(GBS)
+        active_ds = post_ds if (post_ds and k >= args.shift_at) else ds
+        items = active_ds.sample(GBS)
         out = (sched.schedule_random(items, seed=k) if args.random
-               else ctl.schedule(items))
+               else ctl.schedule(items))       # may physically swap `live`
         pred_cmax.append(out.cmax)
-        batch = build_batches(ds, out.plan, items, out.groups, out.plan.n_mb)
+        batch = build_batches(active_ds, out.plan, items, out.groups,
+                              out.plan.n_mb, vocab_size=llm_cfg.vocab_size)
+        params, opt = live["state"]
         ts = time.time()
         params, opt, m = step(params, opt, batch, lr_fn(k))
         m["loss"].block_until_ready()
         ctl.observe_step(out, time.time() - ts)
+        live["state"] = (params, opt)
         losses.append(float(m["loss"]))
         if k % 25 == 0:
             print(f"step {k:4d}  loss={losses[-1]:.3f}  "
@@ -127,10 +189,13 @@ def main():
     print(f"[runtime] imbalance={snap['imbalance_mean']:.4f}  "
           f"sched_overhead={snap['sched_elapsed_mean_s'] * 1e3:.2f}ms  "
           f"drift_events={snap['n_drift_events']}  "
-          f"replans={snap['n_replans']}")
+          f"replans={snap['n_replans']}  "
+          f"physical_swaps={snap['n_physical_swaps']}  "
+          f"reshard_mean_s={snap['reshard_mean_s']:.4f}")
     if args.trace:
         print(f"chrome trace written to {ctl.export_trace(args.trace)}")
     ctl.close()
+    params, opt = live["state"]
     if args.ckpt:
         checkpoint.save(args.ckpt, params, {"steps": args.steps,
                                             "loss": losses[-1]})

@@ -114,9 +114,16 @@ class DFLOPEngine:
                 trace: bool = True, drift=None, auto_replan: bool = True,
                 min_improvement: float = 0.02,
                 replan_n_trials: int = 8,
-                ilp_time_limit_s: float = 0.25):
+                ilp_time_limit_s: float = 0.25,
+                param_swapper=None,
+                swap_horizon_batches: int = 50):
         """Closed control loop: returns a `repro.runtime.RuntimeController`
-        wrapping this engine + a fresh scheduler.  Plans first if needed."""
+        wrapping this engine + a fresh scheduler.  Plans first if needed.
+
+        ``param_swapper`` (see `repro.launch.reshard.ParamSwapper`) threads
+        the training loop's *live* params through the controller: a plan
+        hot-swap then physically re-lays-out parameters on device, gated on
+        amortized reshard cost over ``swap_horizon_batches``."""
         from repro.runtime import (DriftDetector, OnlineCalibrator,
                                    RuntimeController, RuntimeMetrics,
                                    TraceRecorder)
@@ -133,4 +140,6 @@ class DFLOPEngine:
             calibration=OnlineCalibrator() if calibrate else None,
             drift=drift if drift is not None else DriftDetector(),
             auto_replan=auto_replan, min_improvement=min_improvement,
-            replan_n_trials=replan_n_trials)
+            replan_n_trials=replan_n_trials,
+            param_swapper=param_swapper,
+            swap_horizon_batches=swap_horizon_batches)

@@ -85,12 +85,27 @@ def pipeline_forward(mesh: Mesh, stage_fn: Callable, axis: str = "stage"):
                          out_specs=out_specs, check_vma=False)
 
 
-def stack_stage_params(per_layer_params, p: int):
-    """(n_layers, ...) stacked layer params -> (p, n_layers/p, ...)."""
+def stack_stage_params(per_layer_params, p: int, *, from_p=None):
+    """(n_layers, ...) stacked layer params -> (p, n_layers/p, ...).
+
+    With ``from_p`` set (any integer, including 1) the leaves are already
+    stage-stacked as (from_p, n_layers/from_p, ...) and are re-partitioned
+    for the new stage count — the layout transition a physical plan
+    hot-swap needs (`repro.launch.reshard`)."""
 
     def reshape(a):
+        if from_p is not None:
+            assert a.shape[0] == from_p, (
+                f"leaf leading dim {a.shape[0]} != from_p={from_p}")
+            a = a.reshape(from_p * a.shape[1], *a.shape[2:])
         n = a.shape[0]
         assert n % p == 0, f"{n} layers not divisible by {p} stages"
         return a.reshape(p, n // p, *a.shape[1:])
 
     return jax.tree.map(reshape, per_layer_params)
+
+
+def unstack_stage_params(stacked_params):
+    """(p, n_layers/p, ...) stage-stacked leaves -> flat (n_layers, ...)."""
+    return jax.tree.map(lambda a: a.reshape(a.shape[0] * a.shape[1],
+                                            *a.shape[2:]), stacked_params)

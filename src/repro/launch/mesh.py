@@ -9,14 +9,17 @@ from __future__ import annotations
 import jax
 
 
-def compat_make_mesh(shape, axes):
+def compat_make_mesh(shape, axes, devices=None):
     """jax.make_mesh across jax versions: `axis_types` (and
     `jax.sharding.AxisType`) only exist in newer releases; older ones
-    default to Auto axes anyway."""
+    default to Auto axes anyway.  `devices` restricts the mesh to a subset
+    of the local devices (a re-planned θ* rarely uses all of them)."""
+    kw = {} if devices is None else {"devices": devices}
     if hasattr(jax.sharding, "AxisType"):
         return jax.make_mesh(shape, axes,
-                             axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
-    return jax.make_mesh(shape, axes)
+                             axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+                             **kw)
+    return jax.make_mesh(shape, axes, **kw)
 
 
 def make_production_mesh(*, multi_pod: bool = False):

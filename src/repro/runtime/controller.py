@@ -47,10 +47,12 @@ from repro.runtime.trace import TraceRecorder
 class ReplanRecord:
     trigger: DriftEvent
     stale_makespan: float       # current plan evaluated on the drifted dist
-    new_makespan: float         # best plan found by the background search
+    new_makespan: float         # best plan found (inf when none feasible)
     swapped: bool
     search_elapsed_s: float
     plan_tuple: Optional[tuple] = None
+    gated: Optional[str] = None     # why a better plan was NOT adopted
+    reshard: Optional[object] = None  # ReshardReport of the physical swap
 
 
 class RuntimeController:
@@ -62,10 +64,22 @@ class RuntimeController:
                  drift: Optional[DriftDetector] = None,
                  auto_replan: bool = True,
                  min_improvement: float = 0.02,
-                 replan_n_trials: int = 8):
+                 replan_n_trials: int = 8,
+                 param_swapper=None,
+                 swap_horizon_batches: int = 50):
+        """param_swapper: optional physical-reshard hook (duck-typed to
+        `repro.launch.reshard.ParamSwapper`: ``swap(old_plan, new_plan) ->
+        ReshardReport`` plus optional ``estimate_cost_s``/``compatible``).
+        When set, `maybe_swap()` re-lays-out the live params at the batch
+        boundary and only adopts a plan whose predicted per-batch makespan
+        advantage, amortized over ``swap_horizon_batches``, exceeds the
+        measured/estimated reshard cost."""
         self.engine = engine
         self.scheduler = scheduler
         self.gbs = gbs
+        self.param_swapper = param_swapper
+        self.swap_horizon_batches = swap_horizon_batches
+        self._pending_items: Optional[list] = None
         self.trace = trace if trace is not None else TraceRecorder(enabled=False)
         self.metrics = metrics if metrics is not None else RuntimeMetrics()
         self.calibration = calibration
@@ -108,19 +122,43 @@ class RuntimeController:
         return out
 
     # Pipelined variant mirroring the scheduler's submit/collect pair.
+    # Telemetry parity with schedule(): the span/counters/drift feed all
+    # happen at collect() time, when the batch's ScheduleOutput exists —
+    # feeding drift at submit() would run the drift window one batch ahead
+    # of the metrics stream.
     def submit(self, items: Sequence[DataItem]) -> None:
-        self.maybe_swap()
+        """Schedule a batch asynchronously (batch t+1 while step t runs).
+
+        With a `param_swapper`, plan adoption is NOT attempted here:
+        submit() runs concurrently with the previous training step, and a
+        physical re-layout now would be clobbered when that step writes
+        its (old-layout) outputs back into the live pytree — diverging
+        the logical and physical plans.  Physically-backed pipelined loops
+        must call `maybe_swap()` themselves at a true step boundary
+        (after the step's write-back, before the next dispatch); the sync
+        `schedule()` path swaps automatically."""
+        if self.param_swapper is None:
+            self.maybe_swap()
         self.scheduler.submit(items)
+        self._pending_items = list(items)
+
+    def collect(self) -> Optional[ScheduleOutput]:
+        out = self.scheduler.collect()
+        if out is None:
+            return None
+        items, self._pending_items = self._pending_items or [], None
+        self.trace.complete("schedule",
+                            self.trace.now_us() - out.elapsed_s * 1e6,
+                            out.elapsed_s * 1e6, cat="scheduler",
+                            args={"batch": self.batch_idx,
+                                  "n_items": len(items)})
+        self.metrics.record_schedule(out)
+        self.trace.counter("imbalance", out.imbalance)
+        self.trace.counter("pred_cmax_s", out.cmax)
         ev = self.drift.observe_items(items, self.scheduler.tpm)
         if ev is not None:
             self._on_drift(ev)
         self.batch_idx += 1
-
-    def collect(self) -> Optional[ScheduleOutput]:
-        out = self.scheduler.collect()
-        if out is not None:
-            self.metrics.record_schedule(out)
-            self.trace.counter("imbalance", out.imbalance)
         return out
 
     # ------------------------------------------------------------------ #
@@ -137,14 +175,17 @@ class RuntimeController:
                 self._on_drift(ev)
 
     def observe_step(self, out: ScheduleOutput, measured_s: float, *,
-                     idle_s: float = 0.0, busy_s: float = 0.0,
+                     idle_s: float = 0.0, busy_s: Optional[float] = None,
                      stage_busy=None) -> None:
-        """Whole-step feedback: wall time vs. the predicted makespan."""
+        """Whole-step feedback: wall time vs. the predicted makespan.
+
+        ``busy_s=None`` means "not measured" (the non-idle remainder of the
+        step is assumed busy); an explicit ``0.0`` is a fully *idle* step
+        and must yield bubble fraction 1.0, not 0.0."""
         self.trace.complete("step", self.trace.now_us() - measured_s * 1e6,
                             measured_s * 1e6, cat="step",
                             args={"pred_cmax_s": out.cmax})
-        self.metrics.record_step(measured_s, idle_s, busy_s or measured_s,
-                                 stage_busy)
+        self.metrics.record_step(measured_s, idle_s, busy_s, stage_busy)
         self.trace.counter("bubble_fraction",
                            self.metrics.bubble_fraction.last())
         if out.cmax > 0 and measured_s > 0:
@@ -209,7 +250,15 @@ class RuntimeController:
             corrector=self.calibration, seed=self._replan_seed)
 
     def maybe_swap(self) -> bool:
-        """Adopt a finished background re-plan (batch-boundary only)."""
+        """Adopt a finished background re-plan (batch-boundary only).
+
+        With a `param_swapper`, adoption is *physical*: the live params
+        are re-laid-out for the new plan before the logical swap (so the
+        two never diverge — a failed reshard keeps the stale plan), and
+        the decision is additionally gated on amortized cost: the
+        predicted per-batch makespan advantage over
+        ``swap_horizon_batches`` must exceed the measured/estimated
+        reshard time (layout reconfiguration is not free)."""
         with self._lock:
             fut = self._replan_future
             if fut is None or not fut.done():
@@ -223,23 +272,83 @@ class RuntimeController:
             self.trace.instant("replan-error", cat="replan",
                                args={"error": f"{type(e).__name__}: {e}"})
             return False
-        swapped = (res.found
-                   and res.makespan < stale * (1.0 - self.min_improvement))
+        # Guard the not-found path: res.makespan is meaningless without a
+        # feasible plan — record inf, never compare against `stale`.
+        new_mk = res.makespan if res.found else float("inf")
+        swapped = res.found and new_mk < stale * (1.0 - self.min_improvement)
+        gated: Optional[str] = None
+        report = None
+        old_plan = self.scheduler.plan
+        if swapped and self.param_swapper is not None:
+            gated = self._physical_gate(old_plan, res.plan, stale, new_mk)
+            if gated is None:
+                # span recorded manually, on success only: a "reshard"
+                # slice in the trace must mean a re-layout actually
+                # happened (consumers count them as physical swaps)
+                t_us = self.trace.now_us()
+                try:
+                    report = self.param_swapper.swap(old_plan, res.plan)
+                    self.trace.complete(
+                        "reshard", t_us, self.trace.now_us() - t_us,
+                        cat="reshard",
+                        args={"old": list(old_plan.as_tuple()),
+                              "new": list(res.plan.as_tuple())})
+                except Exception as e:  # noqa: BLE001 — same contract as a
+                    # failed search: never take down the training loop...
+                    self.trace.instant(
+                        "reshard-error", cat="reshard",
+                        args={"error": f"{type(e).__name__}: {e}"})
+                    # ...unless a failed *donated* transfer already
+                    # consumed the live buffers — the stale layout is gone
+                    # too, so continuing would train on a deleted pytree.
+                    # Fail fast instead of silently keeping a broken plan.
+                    if getattr(self.param_swapper, "damaged", False):
+                        raise
+                    gated = "reshard-error"
+            if gated is not None:
+                swapped = False
+                self.trace.instant("swap-gated", cat="replan",
+                                   args={"reason": gated,
+                                         "stale_makespan_s": stale,
+                                         "new_makespan_s": new_mk})
+            else:
+                self.metrics.record_reshard(report.elapsed_s)
+                self.trace.counter("reshard_s", report.elapsed_s)
         if swapped:
             self.scheduler.set_plan(res.plan)
             self.engine.plan_result = res
             self.metrics.n_replans += 1
             self.trace.instant("plan-swap", cat="replan",
                                args={"stale_makespan_s": stale,
-                                     "new_makespan_s": res.makespan,
+                                     "new_makespan_s": new_mk,
                                      "plan": list(res.plan.as_tuple())})
         # Re-arm against the drifted regime either way, otherwise the same
         # shift keeps firing the detector every cooldown window.
         self.drift.rebase(dist)
         self.replans.append(ReplanRecord(
-            event, stale, res.makespan, swapped, res.elapsed_s,
-            res.plan.as_tuple() if res.found else None))
+            event, stale, new_mk, swapped, res.elapsed_s,
+            res.plan.as_tuple() if res.found else None,
+            gated=gated, reshard=report))
         return swapped
+
+    def _physical_gate(self, old_plan, new_plan, stale: float,
+                       new_mk: float) -> Optional[str]:
+        """Why a physically-backed swap must NOT happen (None = allowed).
+
+        The amortization gate compares the predicted makespan advantage
+        accumulated over the horizon against the swapper's cost estimate —
+        measured reshard time once a swap has happened, a bytes/bandwidth
+        model before that."""
+        sw = self.param_swapper
+        compat = getattr(sw, "compatible", None)
+        if compat is not None and not compat(old_plan, new_plan):
+            return "incompatible"
+        est = getattr(sw, "estimate_cost_s", None)
+        cost = float(est(old_plan, new_plan)) if est is not None else 0.0
+        gain = (stale - new_mk) * self.swap_horizon_batches
+        if gain <= cost:
+            return "amortization"
+        return None
 
     def drain(self, timeout: Optional[float] = None) -> bool:
         """Block until any in-flight search finishes, then try to swap.

@@ -52,12 +52,14 @@ class RuntimeMetrics:
         self.pred_cmax_s = RollingStat(window)
         self.bubble_fraction = RollingStat(window)
         self.step_time_s = RollingStat(window)
+        self.reshard_s = RollingStat(window)
         self.stage_util: Dict[int, RollingStat] = {}
         self.pred_error: Dict[str, RollingStat] = {}
         self.n_schedules = 0
         self.n_steps = 0
         self.n_replans = 0
         self.n_drift_events = 0
+        self.n_physical_swaps = 0
 
     # ------------------------------------------------------------------ #
     def record_schedule(self, out) -> None:
@@ -67,8 +69,14 @@ class RuntimeMetrics:
         self.pred_cmax_s.add(out.cmax)
         self.n_schedules += 1
 
-    def record_step(self, step_time_s: float, idle_s: float, busy_s: float,
+    def record_step(self, step_time_s: float, idle_s: float,
+                    busy_s: Optional[float] = None,
                     stage_busy: Optional[np.ndarray] = None) -> None:
+        """``busy_s=None`` (not measured) defaults to the non-idle
+        remainder of the step; an explicit ``0.0`` means a fully idle step
+        (bubble fraction 1.0) — the two must not be conflated."""
+        if busy_s is None:
+            busy_s = max(step_time_s - idle_s, 0.0)
         self.step_time_s.add(step_time_s)
         self.bubble_fraction.add(idle_s / max(idle_s + busy_s, 1e-12))
         if stage_busy is not None and step_time_s > 0:
@@ -76,6 +84,11 @@ class RuntimeMetrics:
                 self.stage_util.setdefault(
                     p, RollingStat(self.window)).add(b / step_time_s)
         self.n_steps += 1
+
+    def record_reshard(self, elapsed_s: float) -> None:
+        """One physical param re-layout (plan hot-swap's device half)."""
+        self.reshard_s.add(elapsed_s)
+        self.n_physical_swaps += 1
 
     def record_prediction(self, module: str, predicted: float,
                           actual: float) -> None:
@@ -91,6 +104,8 @@ class RuntimeMetrics:
             "n_steps": self.n_steps,
             "n_replans": self.n_replans,
             "n_drift_events": self.n_drift_events,
+            "n_physical_swaps": self.n_physical_swaps,
+            "reshard_mean_s": self.reshard_s.mean(),
             "imbalance_mean": self.imbalance.mean(),
             "imbalance_last": self.imbalance.last(),
             "sched_elapsed_mean_s": self.sched_elapsed_s.mean(),

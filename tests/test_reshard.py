@@ -1,0 +1,345 @@
+"""Physical plan hot-swap: `repro.launch.reshard` + controller gating.
+
+Device-level equivalence (bit-identical pipeline outputs across (tp, pp)
+transitions) lives in test_multidevice.py (forced-host-device subprocess);
+here: the layout transforms, the cost model, and the controller's
+amortized-cost gate — all on the default single device.
+"""
+import concurrent.futures
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.optimizer.search import SearchResult
+from repro.core.optimizer.space import ModuleParallelism, ParallelismPlan
+from repro.core.pipeline.executor import stack_stage_params, unstack_stage_params
+from repro.launch.reshard import (
+    ParamSwapper,
+    ReshardReport,
+    clamped_plan_mesh,
+    estimate_reshard_s,
+    param_bytes,
+    plan_mesh,
+    reshard_params,
+)
+from repro.runtime.drift import DriftEvent
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _plan(tp=1, pp=1, dp=1, n_mb=2):
+    return ParallelismPlan(llm=ModuleParallelism(tp, pp, dp), n_mb=n_mb)
+
+
+# --------------------------------------------------------------------- #
+# layout transforms
+# --------------------------------------------------------------------- #
+def test_stack_stage_params_generalized_restack():
+    W = jnp.arange(8 * 3 * 3, dtype=jnp.float32).reshape(8, 3, 3)
+    s4 = stack_stage_params(W, 4)
+    assert s4.shape == (4, 2, 3, 3)
+    # re-stack 4 -> 2 equals stacking flat -> 2 directly
+    np.testing.assert_array_equal(
+        np.asarray(stack_stage_params(s4, 2, from_p=4)),
+        np.asarray(stack_stage_params(W, 2)))
+    # from_p=1 means "stacked with a single stage", not "flat"
+    s1 = stack_stage_params(W, 1)
+    assert s1.shape == (1, 8, 3, 3)
+    np.testing.assert_array_equal(
+        np.asarray(stack_stage_params(s1, 4, from_p=1)), np.asarray(s4))
+    # unstack inverts any stacking
+    np.testing.assert_array_equal(np.asarray(unstack_stage_params(s4)),
+                                  np.asarray(W))
+    with pytest.raises(AssertionError, match="not divisible"):
+        stack_stage_params(W, 3)
+
+
+def test_plan_mesh_shape_and_device_shortfall():
+    mesh = plan_mesh(_plan(tp=1, pp=1, dp=1))
+    assert dict(mesh.shape) == {"data": 1, "stage": 1, "model": 1}
+    with pytest.raises(ValueError, match="devices"):
+        plan_mesh(_plan(tp=8, pp=4, dp=2))
+    # the clamped factory fits the same plan onto whatever exists
+    clamped = clamped_plan_mesh(_plan(tp=8, pp=4, dp=2))
+    assert np.prod(list(clamped.shape.values())) <= jax.device_count()
+
+
+def test_reshard_params_report_and_bytes():
+    params = {"w": jnp.ones((4, 8), jnp.float32),
+              "b": jnp.zeros((8,), jnp.float32)}
+    total = param_bytes(params)
+    new, rep = reshard_params(params, _plan(), _plan())
+    assert isinstance(rep, ReshardReport)
+    assert rep.bytes_total == total == 160
+    assert rep.bytes_moved == total        # fresh placement moves all bytes
+    assert rep.elapsed_s >= 0.0 and rep.n_leaves == 2 and not rep.restacked
+    assert rep.old_plan == rep.new_plan == _plan().as_tuple()
+    # placing again onto the SAME layout moves nothing
+    _, rep2 = reshard_params(new, _plan(), _plan())
+    assert rep2.bytes_moved == 0
+    np.testing.assert_array_equal(np.asarray(new["w"]),
+                                  np.asarray(params["w"]))
+
+
+def test_reshard_params_autodetects_pp1_stacking():
+    """A (1, L, ...) pytree under a pp=1 plan is still stage-stacked: the
+    default stage_stacked=None must re-partition it for a larger PP, not
+    replicate it with a stale leading dim."""
+    W = jnp.arange(24, dtype=jnp.float32).reshape(8, 3)
+    stacked1 = stack_stage_params(W, 1)               # (1, 8, 3)
+    new, rep = reshard_params(stacked1, _plan(pp=1), _plan(pp=4),
+                              mesh_factory=clamped_plan_mesh)
+    assert rep.restacked and new.shape == (4, 2, 3)
+    np.testing.assert_array_equal(np.asarray(unstack_stage_params(new)),
+                                  np.asarray(W))
+
+
+def test_reshard_params_restack_raises_on_non_divisible():
+    stacked = {"w": jnp.ones((4, 2, 3), jnp.float32)}   # 8 layers, pp=4
+    with pytest.raises(ValueError, match="not divisible"):
+        reshard_params(stacked, _plan(pp=4), _plan(pp=3),
+                       stage_stacked=True)
+
+
+def test_estimate_reshard_s_linear_in_bytes():
+    assert estimate_reshard_s(0, latency_s=0.25) == 0.25
+    assert estimate_reshard_s(10**11, bandwidth_bytes_per_s=1e11,
+                              latency_s=0.0) == 1.0
+
+
+# --------------------------------------------------------------------- #
+# ParamSwapper
+# --------------------------------------------------------------------- #
+def _swapper(params, **kw):
+    live = {"p": params}
+    sw = ParamSwapper(lambda: live["p"], lambda v: live.update(p=v), **kw)
+    return sw, live
+
+
+def test_swapper_estimate_prefers_measured_bandwidth():
+    # configured bandwidth of 1 B/s prices the 16 KiB pytree at hours;
+    # one measured swap replaces it with the real (far higher) bandwidth
+    sw, _ = _swapper({"w": jnp.ones((64, 64))}, bandwidth_bytes_per_s=1.0,
+                     latency_s=0.0)
+    assert sw.estimate_cost_s(_plan(), _plan()) == pytest.approx(64 * 64 * 4)
+    rep = sw.swap(_plan(), _plan())
+    assert sw.reports == [rep] and rep.bytes_moved > 0
+    measured = sw.estimate_cost_s(_plan(), _plan())
+    assert 0.0 < measured < 10.0
+    # the estimate is sized to the pytree being priced, not a raw mean of
+    # past elapsed times: pricing from a history of one cheap swap must
+    # scale with measured bandwidth (bytes/elapsed), hence equal here
+    assert measured == pytest.approx(
+        rep.bytes_total / (rep.bytes_moved / rep.elapsed_s))
+
+
+def test_swapper_compatibility_gates():
+    sw, _ = _swapper({"w": jnp.ones((4, 2, 3))}, stage_stacked=True,
+                     mesh_factory=clamped_plan_mesh)
+    assert sw.compatible(_plan(pp=4), _plan(pp=2))        # 8 % 2 == 0
+    assert not sw.compatible(_plan(pp=4), _plan(pp=3))    # 8 % 3 != 0
+    sw_strictmesh, _ = _swapper({"w": jnp.ones((4, 2, 3))})
+    assert not sw_strictmesh.compatible(_plan(), _plan(tp=8, dp=4))
+    # non-strict (emulation) mode falls back to re-placement instead
+    sw2, live2 = _swapper({"w": jnp.ones((4, 2, 3))}, stage_stacked=True,
+                          strict=False, mesh_factory=clamped_plan_mesh)
+    assert sw2.compatible(_plan(pp=4), _plan(pp=3))
+    rep = sw2.swap(_plan(pp=4), _plan(pp=3))
+    assert not rep.restacked and rep.bytes_moved > 0
+    assert live2["p"]["w"].shape == (4, 2, 3)             # layout kept
+
+
+def test_swapper_updates_live_params_via_callbacks():
+    W = jnp.arange(24, dtype=jnp.float32).reshape(8, 3)
+    sw, live = _swapper(stack_stage_params(W, 4), stage_stacked=True,
+                        mesh_factory=clamped_plan_mesh)
+    rep = sw.swap(_plan(pp=4), _plan(pp=2))
+    assert rep.restacked
+    assert live["p"].shape == (2, 4, 3)
+    np.testing.assert_array_equal(np.asarray(unstack_stage_params(live["p"])),
+                                  np.asarray(W))
+
+
+# --------------------------------------------------------------------- #
+# controller integration: amortized gate + physical swap + found-guard
+# --------------------------------------------------------------------- #
+def _controller(swapper=None, horizon=50):
+    from repro.core.engine import DFLOPEngine
+    from repro.common.types import ModelConfig
+    from repro.core.optimizer.space import ClusterSpec
+    from repro.data.synthetic import MixedDataset
+
+    llm = ModelConfig(name="l", family="dense", n_layers=8, d_model=256,
+                      n_heads=4, n_kv_heads=4, d_ff=1024, vocab_size=512)
+    eng = DFLOPEngine(llm_cfg=llm, cluster=ClusterSpec(n_chips=4,
+                                                       chips_per_node=4))
+    eng.profile(MixedDataset("single_image", seed=0,
+                             tokens_per_media_item=64))
+    eng.plan(8)
+    return eng.runtime(8, adaptive=False, auto_replan=False, calibrate=False,
+                       param_swapper=swapper, swap_horizon_batches=horizon)
+
+
+def _inject_result(ctl, res, stale):
+    """Hand maybe_swap() a finished background search."""
+    fut = concurrent.futures.Future()
+    event = DriftEvent("shape-ks", 0.5, 0.2, 8)
+    fut.set_result((event, ctl.engine.dist, res, stale))
+    ctl._replan_future = fut
+
+
+def test_maybe_swap_guards_not_found_search():
+    ctl = _controller()
+    _inject_result(ctl, SearchResult(None, float("nan"), 5, 0, 0.01), 1.25)
+    assert ctl.maybe_swap() is False
+    rec = ctl.replans[-1]
+    assert rec.new_makespan == float("inf")
+    assert not rec.swapped and rec.plan_tuple is None and rec.gated is None
+    ctl.close()
+
+
+def test_maybe_swap_physical_swap_records_reshard():
+    sw, live = _swapper({"w": jnp.ones((256, 256))}, latency_s=0.0)
+    ctl = _controller(sw)
+    better = _plan(n_mb=4)
+    _inject_result(ctl, SearchResult(better, 0.5, 5, 5, 0.01), 1.0)
+    assert ctl.maybe_swap() is True
+    assert ctl.plan is better
+    assert ctl.metrics.n_physical_swaps == 1
+    assert ctl.metrics.n_replans == 1
+    assert ctl.metrics.reshard_s.last() == sw.reports[-1].elapsed_s
+    rec = ctl.replans[-1]
+    assert rec.swapped and rec.reshard is sw.reports[-1]
+    names = {e[1] for e in ctl.trace._events}
+    assert "reshard" in names and "plan-swap" in names
+    assert "reshard_s" in names                    # counter track
+    ctl.close()
+
+
+def test_maybe_swap_gates_on_amortized_reshard_cost():
+    # cost model says the reshard takes ~1e9 s: no finite horizon of
+    # per-batch savings can amortize it -> the swap must NOT happen.
+    sw, _ = _swapper({"w": jnp.ones((8, 8))}, latency_s=1e9)
+    ctl = _controller(sw, horizon=50)
+    stale_plan = ctl.plan
+    _inject_result(ctl, SearchResult(_plan(n_mb=4), 0.5, 5, 5, 0.01), 1.0)
+    assert ctl.maybe_swap() is False
+    assert ctl.plan is stale_plan
+    assert ctl.metrics.n_replans == 0 and ctl.metrics.n_physical_swaps == 0
+    rec = ctl.replans[-1]
+    assert rec.gated == "amortization" and not rec.swapped
+    assert rec.plan_tuple is not None              # the plan WAS found
+    assert "swap-gated" in {e[1] for e in ctl.trace._events}
+    ctl.close()
+
+
+def test_maybe_swap_gates_on_incompatible_transition():
+    sw, _ = _swapper({"w": jnp.ones((4, 2, 3))}, stage_stacked=True,
+                     latency_s=0.0)
+    ctl = _controller(sw)
+    _inject_result(ctl, SearchResult(_plan(pp=3), 0.5, 5, 5, 0.01), 1.0)
+    assert ctl.maybe_swap() is False
+    assert ctl.replans[-1].gated == "incompatible"
+    ctl.close()
+
+
+class _FailingSwapper:
+    """Reshard hook that always fails; optionally reports the live
+    buffers as consumed by a donated transfer."""
+
+    def __init__(self, damage: bool):
+        self._damage = damage
+        self.damaged = False
+
+    def swap(self, old_plan, new_plan):
+        self.damaged = self._damage
+        raise RuntimeError("transfer blew up")
+
+
+def test_maybe_swap_recovers_from_non_destructive_reshard_failure():
+    ctl = _controller(_FailingSwapper(damage=False))
+    stale_plan = ctl.plan
+    _inject_result(ctl, SearchResult(_plan(n_mb=4), 0.5, 5, 5, 0.01), 1.0)
+    assert ctl.maybe_swap() is False           # stale plan kept, loop alive
+    assert ctl.plan is stale_plan
+    assert ctl.replans[-1].gated == "reshard-error"
+    names = {e[1] for e in ctl.trace._events}
+    assert "reshard-error" in names
+    # no "reshard" slice for a re-layout that never happened: trace
+    # consumers count those as physical swaps
+    assert "reshard" not in names
+    ctl.close()
+
+
+def test_maybe_swap_fails_fast_when_donation_consumed_live_buffers():
+    ctl = _controller(_FailingSwapper(damage=True))
+    _inject_result(ctl, SearchResult(_plan(n_mb=4), 0.5, 5, 5, 0.01), 1.0)
+    with pytest.raises(RuntimeError, match="transfer blew up"):
+        ctl.maybe_swap()                       # training state is gone:
+    ctl.close()                                # never continue silently
+
+
+def test_submit_defers_physical_swap_to_explicit_boundary():
+    """submit() runs concurrently with the previous step: a physical
+    re-layout there would be clobbered by the step's write-back, so with
+    a param_swapper the adoption must wait for an explicit maybe_swap()
+    at a true step boundary."""
+    from repro.data.synthetic import MixedDataset
+
+    sw, _ = _swapper({"w": jnp.ones((8, 8))}, latency_s=0.0)
+    ctl = _controller(sw)
+    better = _plan(n_mb=4)
+    _inject_result(ctl, SearchResult(better, 0.5, 5, 5, 0.01), 1.0)
+    items = MixedDataset("single_image", seed=0,
+                         tokens_per_media_item=64).sample(8)
+    ctl.submit(items)
+    assert ctl.metrics.n_physical_swaps == 0     # not adopted mid-flight
+    assert ctl.plan is not better
+    assert ctl.collect() is not None
+    assert ctl.maybe_swap() is True              # explicit boundary adopts
+    assert ctl.metrics.n_physical_swaps == 1 and ctl.plan is better
+    ctl.close()
+
+
+def test_maybe_swap_without_swapper_is_logical_only():
+    ctl = _controller(None)
+    better = _plan(n_mb=4)
+    _inject_result(ctl, SearchResult(better, 0.5, 5, 5, 0.01), 1.0)
+    assert ctl.maybe_swap() is True
+    assert ctl.metrics.n_physical_swaps == 0
+    assert ctl.plan is better
+    ctl.close()
+
+
+# --------------------------------------------------------------------- #
+# end-to-end smoke: train_mllm --replan --trace over a mid-run shift on
+# forced host devices must perform a physical swap and trace it (the CI
+# `reshard-smoke` job runs exactly this test)
+# --------------------------------------------------------------------- #
+@pytest.mark.slow
+def test_train_mllm_physical_swap_smoke(tmp_path):
+    trace_path = str(tmp_path / "trace.json")
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    r = subprocess.run(
+        [sys.executable, os.path.join(ROOT, "examples", "train_mllm.py"),
+         "--tiny", "--steps", "24", "--shift-at", "6", "--replan",
+         "--trace", trace_path],
+        capture_output=True, text=True, env=env, timeout=900)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "physical_swaps=" in r.stdout
+    n_swaps = int(r.stdout.split("physical_swaps=")[1].split()[0])
+    assert n_swaps >= 1, r.stdout
+    doc = json.loads(open(trace_path).read())
+    names = {e["name"] for e in doc["traceEvents"]}
+    assert "reshard" in names, sorted(names)
+    assert "plan-swap" in names
+    reshard_evs = [e for e in doc["traceEvents"] if e["name"] == "reshard"]
+    assert all(ev["ph"] == "X" and ev["dur"] >= 0 for ev in reshard_evs)

@@ -87,6 +87,19 @@ def test_trace_bounded_buffer_counts_drops():
 # --------------------------------------------------------------------- #
 # metrics
 # --------------------------------------------------------------------- #
+def test_record_step_distinguishes_unmeasured_from_idle_busy():
+    """An explicitly-passed busy_s=0.0 is a fully idle step (bubble 1.0);
+    busy_s=None means 'not measured' and defaults to the non-idle
+    remainder — the two must not be conflated."""
+    m = RuntimeMetrics()
+    m.record_step(2.0, idle_s=2.0, busy_s=0.0)        # fully idle step
+    assert m.bubble_fraction.last() == 1.0
+    m.record_step(2.0, idle_s=0.5)                    # busy not measured
+    assert abs(m.bubble_fraction.last() - 0.25) < 1e-9
+    m.record_step(2.0, idle_s=0.0)                    # nothing measured
+    assert m.bubble_fraction.last() == 0.0
+
+
 def test_metrics_rolling_and_snapshot():
     m = RuntimeMetrics(window=4)
     for i in range(8):
@@ -351,6 +364,29 @@ def test_fig16_throughput_recovery():
                                                        "plan-swap"}
 
 
+@pytest.mark.slow
+def test_fig16_physical_swap_recovery_net_of_reshard():
+    """Physical-swap variant of the fig16 acceptance demo: the hot-swap
+    pays a *measured* reshard cost and still recovers — the summary
+    reports the ratio net of that cost."""
+    from benchmarks.fig16_replan import TRACE_PATH_PHYSICAL, run as fig16_run
+
+    rows = fig16_run(gbs=64, n_pre=4, n_post=18, physical=True)
+    summary = rows[-1]
+    assert summary["phase"] == "summary"
+    assert summary["n_replans"] >= 1
+    assert summary["n_physical_swaps"] >= 1
+    assert summary["reshard_s_total"] > 0.0
+    assert summary["reshard_bytes_moved"] > 0
+    # net recovery still clears the bar, and by construction sits at or
+    # below the gross ratio
+    assert summary["recovery_ratio_net"] > 1.2
+    assert summary["recovery_ratio_net"] <= summary["recovery_ratio"]
+    doc = json.loads(open(TRACE_PATH_PHYSICAL).read())
+    names = {e["name"] for e in doc["traceEvents"]}
+    assert "reshard" in names and "plan-swap" in names
+
+
 def test_controller_pipelined_submit_collect():
     eng = _engine("single_image")
     eng.plan(32)
@@ -363,3 +399,44 @@ def test_controller_pipelined_submit_collect():
     assert ctl.metrics.n_schedules == 1
     assert ctl.collect() is None
     ctl.close()
+
+
+def _trace_stream(ctl):
+    """Comparable trace view: (ph, name, cat, args) without timestamps."""
+    return [(ph, name, cat, args)
+            for ph, name, cat, ts, dur, tid, args in ctl.trace._events]
+
+
+def test_submit_collect_telemetry_parity_with_sync_path():
+    """The async path must emit the same trace spans/counters, feed the
+    same metrics, and advance the drift window at the same points as
+    schedule() — batch for batch."""
+    eng = _engine("single_image")
+    eng.plan(32)
+    ds = eng.dataset
+    batches = [ds.sample(32) for _ in range(4)]
+    ctl_sync = eng.runtime(32, adaptive=False, auto_replan=False,
+                           calibrate=False, ilp_time_limit_s=0.05)
+    ctl_async = eng.runtime(32, adaptive=False, auto_replan=False,
+                            calibrate=False, ilp_time_limit_s=0.05)
+    for items in batches:
+        ctl_sync.schedule(items)
+    for items in batches:
+        ctl_async.submit(items)
+        # drift must NOT run ahead of the metrics stream: the submitted
+        # batch enters the window only once its ScheduleOutput is collected
+        n_before = len(ctl_async.drift._win_seq)
+        out = ctl_async.collect()
+        assert out is not None
+        assert len(ctl_async.drift._win_seq) == n_before + 32
+
+    assert ctl_async.batch_idx == ctl_sync.batch_idx == 4
+    assert _trace_stream(ctl_async) == _trace_stream(ctl_sync)
+    for name in ("imbalance", "pred_cmax_s", "sched_elapsed_s"):
+        s, a = getattr(ctl_sync.metrics, name), getattr(ctl_async.metrics, name)
+        assert a.count == s.count == 4
+        if name != "sched_elapsed_s":          # elapsed is wall time
+            np.testing.assert_allclose(list(a._buf), list(s._buf))
+    assert (list(ctl_async.drift._win_seq) == list(ctl_sync.drift._win_seq))
+    ctl_sync.close()
+    ctl_async.close()

@@ -1,7 +1,9 @@
 #!/usr/bin/env python
 """Docs health check: internal links + docstring examples.
 
-Two passes, both dependency-free:
+Two passes (the link check is dependency-free; the doctest pass imports
+the listed modules, which need numpy + jax installed — the CI docs job
+installs both):
 
   1. every relative markdown link in README.md, docs/*.md and
      benchmarks/README.md must resolve to a file in the repo (http(s)
@@ -33,6 +35,7 @@ REQUIRED = [
     "docs/ARCHITECTURE.md",
     "docs/simulator.md",
     "docs/objectives.md",
+    "docs/resharding.md",
     "benchmarks/README.md",
 ]
 
@@ -41,6 +44,7 @@ REQUIRED = [
 DOCTEST_MODULES = [
     "repro.core.pipeline.simulator",
     "repro.core.optimizer.makespan",
+    "repro.launch.reshard",
 ]
 
 # [text](target) — excluding images; target split from an optional title
