@@ -38,6 +38,7 @@ def main() -> None:
         fig15_adaptive,
         fig16_replan,
         fig17_objective,
+        fig18_composer,
         roofline,
         tab4_overhead,
     )
@@ -56,6 +57,7 @@ def main() -> None:
         "fig15": fig15_adaptive,
         "fig16": fig16_replan,
         "fig17": fig17_objective,
+        "fig18": fig18_composer,
         "tab4": tab4_overhead,
         "roofline": roofline,
     }

@@ -109,6 +109,12 @@ def main():
     ap.add_argument("--objective", default="mean",
                     choices=["mean", "expected-random", "balanced-quantile"],
                     help="search objective used by background re-planning")
+    ap.add_argument("--compose-window", type=int, default=0,
+                    help="lookahead batch composition over a window of "
+                         "this many global batches (0 = FIFO draws)")
+    ap.add_argument("--max-staleness", type=int, default=0,
+                    help="max batches an item may wait in the compose "
+                         "window (0 = default, 2x the window)")
     ap.add_argument("--tiny", action="store_true",
                     help="sub-1M-param model (CI smoke: compiles in "
                          "seconds, same control-loop code paths)")
@@ -152,8 +158,11 @@ def main():
     drift = DriftDetector(window=128, check_every=32, cooldown=64)
     ctl = eng.runtime(GBS, plan=plan, adaptive=True, ilp_time_limit_s=0.05,
                       auto_replan=args.replan, drift=drift,
-                      param_swapper=swapper)
+                      param_swapper=swapper,
+                      compose_window=args.compose_window,
+                      max_staleness=args.max_staleness or None)
     sched = ctl.scheduler
+    composer = ctl.composer
 
     lr_fn = cosine_lr(1e-3, warmup=20, total=args.steps)
     step = jax.jit(make_train_step(
@@ -164,7 +173,12 @@ def main():
     t0 = time.time()
     for k in range(args.steps):
         active_ds = post_ds if (post_ds and k >= args.shift_at) else ds
-        items = active_ds.sample(GBS)
+        if composer is not None:
+            # refills the window to capacity (first call warms the full
+            # W-batch lookahead), then emits one composed batch
+            items = ctl.compose(draw=lambda: active_ds.sample(GBS))
+        else:
+            items = active_ds.sample(GBS)
         out = (sched.schedule_random(items, seed=k) if args.random
                else ctl.schedule(items))       # may physically swap `live`
         pred_cmax.append(out.cmax)
@@ -192,6 +206,11 @@ def main():
           f"replans={snap['n_replans']}  "
           f"physical_swaps={snap['n_physical_swaps']}  "
           f"reshard_mean_s={snap['reshard_mean_s']:.4f}")
+    if composer is not None:
+        print(f"[compose] batches={snap['n_composed']}  "
+              f"pred_gain_mean={snap['compose_pred_gain_mean']:.3f}  "
+              f"forced_items={snap['n_forced_items']}  "
+              f"overhead={snap['compose_elapsed_mean_s'] * 1e3:.2f}ms")
     if args.trace:
         print(f"chrome trace written to {ctl.export_trace(args.trace)}")
     ctl.close()

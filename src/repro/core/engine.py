@@ -116,14 +116,24 @@ class DFLOPEngine:
                 replan_n_trials: int = 8,
                 ilp_time_limit_s: float = 0.25,
                 param_swapper=None,
-                swap_horizon_batches: int = 50):
+                swap_horizon_batches: int = 50,
+                compose_window: int = 0,
+                max_staleness: Optional[int] = None):
         """Closed control loop: returns a `repro.runtime.RuntimeController`
         wrapping this engine + a fresh scheduler.  Plans first if needed.
 
         ``param_swapper`` (see `repro.launch.reshard.ParamSwapper`) threads
         the training loop's *live* params through the controller: a plan
         hot-swap then physically re-lays-out parameters on device, gated on
-        amortized reshard cost over ``swap_horizon_batches``."""
+        amortized reshard cost over ``swap_horizon_batches``.
+
+        ``compose_window=W`` > 0 attaches a lookahead batch composer
+        (`repro.data.composer.LookaheadComposer`) holding a ``W·gbs``
+        reorder window; ``max_staleness`` bounds how many batches an item
+        may wait in it (default ``2·W``).  The controller wires the
+        composer's telemetry and flushes its window pricing on plan
+        hot-swaps; feed it via ``ctl.compose(draw=...)`` or
+        ``ScheduledLoader(composer=ctl.composer)``."""
         from repro.runtime import (DriftDetector, OnlineCalibrator,
                                    RuntimeController, RuntimeMetrics,
                                    TraceRecorder)
@@ -133,6 +143,12 @@ class DFLOPEngine:
             plan = self.plan_result.plan
         sched = self.scheduler(plan=plan, adaptive=adaptive,
                                ilp_time_limit_s=ilp_time_limit_s)
+        composer = None
+        if compose_window > 0:
+            from repro.data.composer import LookaheadComposer
+            composer = LookaheadComposer(sched, gbs=gbs,
+                                         window=compose_window,
+                                         max_staleness=max_staleness)
         return RuntimeController(
             self, sched, gbs,
             trace=TraceRecorder(enabled=trace),
@@ -142,4 +158,5 @@ class DFLOPEngine:
             auto_replan=auto_replan, min_improvement=min_improvement,
             replan_n_trials=replan_n_trials,
             param_swapper=param_swapper,
-            swap_horizon_batches=swap_horizon_batches)
+            swap_horizon_batches=swap_horizon_batches,
+            composer=composer)

@@ -2,9 +2,11 @@ from repro.data.items import DataItem, item_shapes
 from repro.data.synthetic import MixedDataset, MIXTURES
 from repro.data.packing import pack_items, PackedBatch
 
-# NOTE: repro.data.loader imports the scheduler (which imports the profiler,
-# which imports repro.data.items) — import it directly as
-# `from repro.data.loader import ScheduledLoader` to avoid a package cycle.
+# NOTE: repro.data.loader and repro.data.composer import the scheduler
+# (which imports the profiler, which imports repro.data.items) — import
+# them directly as `from repro.data.loader import ScheduledLoader` /
+# `from repro.data.composer import LookaheadComposer` to avoid a package
+# cycle.
 
 __all__ = ["DataItem", "item_shapes", "MixedDataset", "MIXTURES",
            "pack_items", "PackedBatch"]

@@ -6,10 +6,22 @@ global batch of DataItems is partitioned into m = N_mb · L_dp buckets by the
 scheduler; bucket (i, r) becomes row r of microbatch i, sequence-packed to a
 fixed token budget.  Scheduling of batch t+1 overlaps step t via
 `scheduler.submit/collect`.
+
+With a `LookaheadComposer` (``composer=``) the item flow becomes
+compose → schedule → pack: raw draws feed the composer's reorder window
+and the loader consumes *composed* global batches — same overlap with
+step t through the existing prefetch path (composition happens on the
+caller thread while the worker schedules).  See ``docs/data.md``.
+
+Determinism contract (pinned by ``tests/test_loader.py``): prefetch and
+sync modes yield batch-for-batch identical streams.  The two rng streams
+(schedule_random seeds vs. packing token draws) are split per concern —
+a single shared stream would be consumed in a different interleaving by
+the two modes.
 """
 from __future__ import annotations
 
-from typing import Iterator, Optional, Sequence
+from typing import Iterable, Iterator, Optional, Sequence
 
 import numpy as np
 
@@ -20,25 +32,47 @@ from repro.data.synthetic import MixedDataset
 
 
 class ScheduledLoader:
-    def __init__(self, dataset: MixedDataset,
+    def __init__(self, dataset: Optional[MixedDataset],
                  scheduler: OnlineMicrobatchScheduler, *,
                  gbs: int, token_budget: int, vocab_size: int,
                  random_baseline: bool = False, seed: int = 0,
-                 prefetch: bool = True):
+                 prefetch: bool = True,
+                 composer=None,
+                 item_source: Optional[Iterable[Sequence[DataItem]]] = None,
+                 metrics=None):
+        """composer: optional `repro.data.composer.LookaheadComposer`.
+        item_source: optional finite iterable of item batches replacing
+        ``dataset.global_batches(gbs)`` (epoch semantics: at exhaustion
+        the composer window is drained, so every item is emitted exactly
+        once).  metrics: optional `RuntimeMetrics` — per-global-batch
+        truncated-token counts land there (``record_pack``)."""
+        assert dataset is not None or item_source is not None, \
+            "need a dataset or an item_source"
         self.dataset = dataset
         self.scheduler = scheduler
         self.gbs = gbs
         self.budget = token_budget
         self.vocab = vocab_size
         self.random_baseline = random_baseline
-        self.rng = np.random.default_rng(seed)
+        # split streams: seeds for schedule_random vs token draws for
+        # pack_items — the sync and prefetch paths interleave the two
+        # concerns differently, so sharing one stream would break the
+        # mode-equivalence contract
+        self._seed_rng = np.random.default_rng(seed)
+        self._pack_rng = np.random.default_rng([seed, 1])
         self.prefetch = prefetch
+        self.composer = composer
+        self.item_source = item_source
+        self.metrics = metrics
         self.last_schedule: Optional[ScheduleOutput] = None
+        self.last_truncated: int = 0
+        self.total_truncated: int = 0
 
     # ------------------------------------------------------------------ #
     def _schedule(self, items) -> ScheduleOutput:
         if self.random_baseline:
-            return self.scheduler.schedule_random(items, seed=int(self.rng.integers(1 << 31)))
+            return self.scheduler.schedule_random(
+                items, seed=int(self._seed_rng.integers(1 << 31)))
         return self.scheduler.schedule(items)
 
     def _build(self, items: Sequence[DataItem], out: ScheduleOutput) -> dict:
@@ -51,20 +85,42 @@ class ScheduledLoader:
         labels = np.full((n_mb, dp, self.budget), -1, np.int32)
         seg = np.zeros((n_mb, dp, self.budget), np.int32)
         pos = np.zeros((n_mb, dp, self.budget), np.int32)
+        truncated = 0
         for g_idx, g in enumerate(groups):
             i, r = divmod(g_idx, dp)
             packed = pack_items([items[j] for j in g], self.budget,
-                                self.scheduler.tpm, self.vocab, self.rng)
+                                self.scheduler.tpm, self.vocab,
+                                self._pack_rng)
+            truncated += packed.truncated
             tokens[i, r] = packed.tokens[0]
             labels[i, r] = packed.labels[0]
             seg[i, r] = packed.segment_ids[0]
             pos[i, r] = packed.positions[0]
+        self.last_truncated = truncated
+        self.total_truncated += truncated
+        if self.metrics is not None:
+            self.metrics.record_pack(truncated)
         return {"tokens": tokens, "labels": labels,
                 "segment_ids": seg, "positions": pos}
 
     # ------------------------------------------------------------------ #
+    def _item_batches(self) -> Iterator[Sequence[DataItem]]:
+        """Upstream global batches: FIFO draws, optionally re-composed
+        through the lookahead window."""
+        gen = (iter(self.item_source) if self.item_source is not None
+               else self.dataset.global_batches(self.gbs))
+        if self.composer is None:
+            yield from gen
+            return
+        for raw in gen:
+            self.composer.push(raw)
+            while self.composer.ready:
+                yield self.composer.compose()
+        # finite stream: exactly-once requires emptying the window
+        yield from self.composer.drain()
+
     def __iter__(self) -> Iterator[dict]:
-        gen = self.dataset.global_batches(self.gbs)
+        gen = self._item_batches()
         if not self.prefetch:
             for items in gen:
                 out = self._schedule(items)
@@ -72,7 +128,10 @@ class ScheduledLoader:
                 yield self._build(items, out)
             return
         # async: schedule batch t+1 while the caller runs step t
-        items = next(gen)
+        try:
+            items = next(gen)
+        except StopIteration:
+            return
         if self.random_baseline:
             pending_items, pending_out = items, self._schedule(items)
         else:
@@ -81,11 +140,17 @@ class ScheduledLoader:
         while True:
             if pending_out is None:
                 pending_out = self.scheduler.collect()
-            items_next = next(gen)
-            if not self.random_baseline:
-                self.scheduler.submit(items_next)
+            items_next = next(gen, None)
+            next_out = None
+            if items_next is not None:
+                if self.random_baseline:
+                    next_out = self._schedule(items_next)
+                else:
+                    self.scheduler.submit(items_next)
             out, cur_items = pending_out, pending_items
             pending_items = items_next
-            pending_out = self._schedule(items_next) if self.random_baseline else None
+            pending_out = next_out
             self.last_schedule = out
             yield self._build(cur_items, out)
+            if pending_items is None:
+                return

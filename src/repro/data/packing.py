@@ -17,7 +17,14 @@ from repro.data.items import DataItem
 
 @dataclass
 class PackedBatch:
-    """One packed microbatch: token budget `budget`, padded to it."""
+    """One packed microbatch: token budget `budget`, padded to it.
+
+    Token accounting is conserved, never silent: every input token is
+    either placed (``used``) or dropped at the budget boundary
+    (``truncated``), and the row is padded back up to the budget
+    (``padding``) — so ``used + truncated == Σ len(seq)`` and
+    ``used + padding == budget`` (pinned in ``tests/test_packing.py``).
+    """
 
     tokens: np.ndarray        # (1, budget) int32
     labels: np.ndarray        # (1, budget) int32, -1 = ignore
@@ -25,16 +32,24 @@ class PackedBatch:
     positions: np.ndarray     # (1, budget) int32, restart per segment
     n_items: int
     used: int
+    truncated: int = 0        # input tokens dropped at the budget boundary
+
+    @property
+    def padding(self) -> int:
+        return self.tokens.shape[-1] - self.used
 
 
 def pack_tokens(sequences: Sequence[np.ndarray], budget: int,
                 pad_id: int = 0) -> PackedBatch:
-    """Pack token sequences into one row of `budget` tokens (truncating the
-    overflow — callers size the budget from the scheduler)."""
+    """Pack token sequences into one row of `budget` tokens.  Overflow is
+    truncated (callers size the budget from the scheduler) but *counted*:
+    ``PackedBatch.truncated`` carries every dropped input token, including
+    whole sequences skipped once the row is (nearly) full."""
     tokens = np.full((budget,), pad_id, np.int32)
     labels = np.full((budget,), -1, np.int32)
     seg = np.zeros((budget,), np.int32)
     pos = np.zeros((budget,), np.int32)
+    total = sum(len(s) for s in sequences)
     cur = 0
     n = 0
     for s_idx, s in enumerate(sequences):
@@ -48,18 +63,29 @@ def pack_tokens(sequences: Sequence[np.ndarray], budget: int,
         pos[cur:cur + take] = np.arange(take)
         cur += take
         n += 1
-    return PackedBatch(tokens[None], labels[None], seg[None], pos[None], n, cur)
+    return PackedBatch(tokens[None], labels[None], seg[None], pos[None], n,
+                       cur, truncated=total - cur)
 
 
 def pack_items(items: Sequence[DataItem], budget: int,
                tokens_per_media_item: int, vocab: int,
                rng: np.random.Generator) -> PackedBatch:
-    """Pack DataItems (media tokens become placeholder token 1 spans)."""
+    """Pack DataItems (media tokens become placeholder token 1 spans).
+
+    Items longer than the whole budget are clipped *before* token
+    generation (no point materializing tokens that cannot fit), but the
+    clipped length still counts toward ``PackedBatch.truncated`` so the
+    accounting identity holds against the items' true lengths."""
     seqs = []
+    pre_clipped = 0
     for it in items:
-        L = min(it.llm_seq_len(tokens_per_media_item), budget)
+        full = it.llm_seq_len(tokens_per_media_item)
+        L = min(full, budget)
+        pre_clipped += full - L
         seqs.append(rng.integers(2, max(3, vocab), size=L))
-    return pack_tokens(seqs, budget)
+    pb = pack_tokens(seqs, budget)
+    pb.truncated += pre_clipped
+    return pb
 
 
 def greedy_bin_pack(lengths: Sequence[int], budget: int) -> List[List[int]]:

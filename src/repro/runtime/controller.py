@@ -66,19 +66,26 @@ class RuntimeController:
                  min_improvement: float = 0.02,
                  replan_n_trials: int = 8,
                  param_swapper=None,
-                 swap_horizon_batches: int = 50):
+                 swap_horizon_batches: int = 50,
+                 composer=None):
         """param_swapper: optional physical-reshard hook (duck-typed to
         `repro.launch.reshard.ParamSwapper`: ``swap(old_plan, new_plan) ->
         ReshardReport`` plus optional ``estimate_cost_s``/``compatible``).
         When set, `maybe_swap()` re-lays-out the live params at the batch
         boundary and only adopts a plan whose predicted per-batch makespan
         advantage, amortized over ``swap_horizon_batches``, exceeds the
-        measured/estimated reshard cost."""
+        measured/estimated reshard cost.
+
+        composer: optional `repro.data.composer.LookaheadComposer`.  The
+        controller wires its telemetry (compose spans + counters land in
+        this trace/metrics) and flushes its cached window durations on
+        every plan hot-swap, so composition never targets a stale θ*."""
         self.engine = engine
         self.scheduler = scheduler
         self.gbs = gbs
         self.param_swapper = param_swapper
         self.swap_horizon_batches = swap_horizon_batches
+        self.composer = composer
         self._pending_items: Optional[list] = None
         self.trace = trace if trace is not None else TraceRecorder(enabled=False)
         self.metrics = metrics if metrics is not None else RuntimeMetrics()
@@ -100,6 +107,9 @@ class RuntimeController:
         self._lock = threading.Lock()
         self.trace.name_thread(0, "control-loop")
         self.trace.name_thread(1, "replan-search")
+        if composer is not None:
+            composer.trace = self.trace
+            composer.metrics = self.metrics
 
     # ------------------------------------------------------------------ #
     @property
@@ -120,6 +130,37 @@ class RuntimeController:
             self._on_drift(ev)
         self.batch_idx += 1
         return out
+
+    def compose(self, items: Optional[Sequence[DataItem]] = None, *,
+                draw=None):
+        """Emit the next composed global batch (requires a ``composer``).
+
+        ``draw``: a zero-arg callable returning one global batch of
+        items — the canonical per-step form.  It refills the window to
+        capacity before composing, so the very first call warms the full
+        ``window·gbs`` lookahead and every subsequent call draws exactly
+        one batch: ``ctl.compose(draw=lambda: ds.sample(gbs))``.
+
+        ``items``: push one pre-drawn cohort instead.  With this form
+        the caller owns the warm-up — composing per-step from an
+        initially empty window degenerates to FIFO with zero lookahead
+        (each compose sees exactly the cohort just pushed), so a
+        ``compose-cold-window`` trace instant marks any compose below
+        capacity."""
+        comp = self.composer
+        if comp is None:
+            raise RuntimeError("no composer attached; pass composer= (or "
+                               "engine.runtime(compose_window=...))")
+        if draw is not None:
+            while not comp.ready:
+                comp.push(draw())
+        if items is not None:
+            comp.push(items)
+        if not comp.ready:
+            self.trace.instant("compose-cold-window", cat="compose",
+                               args={"pending": comp.pending,
+                                     "capacity": comp.capacity})
+        return comp.compose()
 
     # Pipelined variant mirroring the scheduler's submit/collect pair.
     # Telemetry parity with schedule(): the span/counters/drift feed all
@@ -322,6 +363,12 @@ class RuntimeController:
                                args={"stale_makespan_s": stale,
                                      "new_makespan_s": new_mk,
                                      "plan": list(res.plan.as_tuple())})
+            if self.composer is not None:
+                # the window was priced under the old θ*; re-price before
+                # the next composition targets the swapped plan
+                self.composer.flush_plan()
+                self.trace.instant("composer-flush", cat="compose",
+                                   args={"pending": self.composer.pending})
         # Re-arm against the drifted regime either way, otherwise the same
         # shift keeps firing the detector every cooldown window.
         self.drift.rebase(dist)

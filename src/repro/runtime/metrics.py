@@ -53,6 +53,10 @@ class RuntimeMetrics:
         self.bubble_fraction = RollingStat(window)
         self.step_time_s = RollingStat(window)
         self.reshard_s = RollingStat(window)
+        self.compose_elapsed_s = RollingStat(window)
+        self.compose_pred_gain = RollingStat(window)
+        self.compose_window_fill = RollingStat(window)
+        self.truncated_tokens = RollingStat(window)
         self.stage_util: Dict[int, RollingStat] = {}
         self.pred_error: Dict[str, RollingStat] = {}
         self.n_schedules = 0
@@ -60,6 +64,9 @@ class RuntimeMetrics:
         self.n_replans = 0
         self.n_drift_events = 0
         self.n_physical_swaps = 0
+        self.n_composed = 0
+        self.n_forced_items = 0
+        self.n_truncated_tokens = 0
 
     # ------------------------------------------------------------------ #
     def record_schedule(self, out) -> None:
@@ -90,6 +97,22 @@ class RuntimeMetrics:
         self.reshard_s.add(elapsed_s)
         self.n_physical_swaps += 1
 
+    def record_compose(self, stats) -> None:
+        """`stats`: a `repro.data.composer.ComposeStats` (duck-typed to
+        avoid a core import)."""
+        self.compose_elapsed_s.add(stats.elapsed_s)
+        self.compose_pred_gain.add(stats.pred_gain)
+        self.compose_window_fill.add(stats.window_fill)
+        self.n_composed += 1
+        self.n_forced_items += stats.n_forced
+
+    def record_pack(self, truncated: int) -> None:
+        """Per-global-batch truncated-token count from the packing path —
+        silent truncation is a correctness smell, so it is first-class in
+        the step telemetry."""
+        self.truncated_tokens.add(truncated)
+        self.n_truncated_tokens += int(truncated)
+
     def record_prediction(self, module: str, predicted: float,
                           actual: float) -> None:
         if predicted <= 0 or actual <= 0:
@@ -105,6 +128,12 @@ class RuntimeMetrics:
             "n_replans": self.n_replans,
             "n_drift_events": self.n_drift_events,
             "n_physical_swaps": self.n_physical_swaps,
+            "n_composed": self.n_composed,
+            "n_forced_items": self.n_forced_items,
+            "n_truncated_tokens": self.n_truncated_tokens,
+            "compose_elapsed_mean_s": self.compose_elapsed_s.mean(),
+            "compose_pred_gain_mean": self.compose_pred_gain.mean(),
+            "truncated_tokens_mean": self.truncated_tokens.mean(),
             "reshard_mean_s": self.reshard_s.mean(),
             "imbalance_mean": self.imbalance.mean(),
             "imbalance_last": self.imbalance.last(),

@@ -1,0 +1,398 @@
+"""Differential test harness for the data path (compose → schedule → pack).
+
+Pins the loader/composer contracts the rest of the stack leans on:
+
+  * `ScheduledLoader` prefetch and sync modes yield batch-for-batch
+    identical `PackedBatch` streams and `ScheduleOutput`s (the async
+    overlap is an implementation detail, never a semantic one);
+  * composer-enabled epochs are exact permutations of FIFO epochs —
+    every item exactly once;
+  * no item waits more than `max_staleness` batches in the reorder
+    window (EDF reservation, including the lockstep-aging initial fill);
+  * the fig18 acceptance numbers (slow tier).
+"""
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.common.types import ModelConfig
+from repro.core.engine import DFLOPEngine
+from repro.core.optimizer.space import (ClusterSpec, ModuleParallelism,
+                                        ParallelismPlan)
+from repro.data.composer import LookaheadComposer, sorted_runs
+from repro.data.items import DataItem
+from repro.data.loader import ScheduledLoader
+from repro.data.synthetic import MixedDataset
+from repro.runtime import RuntimeMetrics
+
+TPM = 64
+
+ENC = ModelConfig(name="e", family="vlm-enc", n_layers=4, d_model=256,
+                  n_heads=4, n_kv_heads=4, d_ff=1024, vocab_size=0,
+                  causal=False, use_rope=False, input_embed_dim=64,
+                  has_lm_head=False)
+LLM = ModelConfig(name="l", family="dense", n_layers=8, d_model=512,
+                  n_heads=8, n_kv_heads=8, d_ff=2048, vocab_size=8192)
+
+PLAN = ParallelismPlan(llm=ModuleParallelism(1, 1, 2),
+                       encoder=ModuleParallelism(1, 1, 1), n_mb=2)
+
+
+@pytest.fixture(scope="module")
+def engine():
+    ds = MixedDataset("mixed", seed=0, tokens_per_media_item=TPM)
+    eng = DFLOPEngine(llm_cfg=LLM, enc_cfg=ENC, e_seq_len=64,
+                      cluster=ClusterSpec(n_chips=16, chips_per_node=8,
+                                          mem_bytes=80e9),
+                      tokens_per_media_item=TPM)
+    eng.profile(ds, n_samples=256)
+    return eng
+
+
+def _loader(engine, *, prefetch, random_baseline=False, compose_window=0,
+            gbs=8, seed=3, item_source=None, metrics=None,
+            dataset_seed=7):
+    """A fresh loader with its own scheduler/dataset/composer so the two
+    modes under comparison share no mutable state."""
+    ds = MixedDataset("mixed", seed=dataset_seed, tokens_per_media_item=TPM)
+    sched = engine.scheduler(plan=PLAN, adaptive=False,
+                             ilp_time_limit_s=0.02)
+    composer = (LookaheadComposer(sched, gbs=gbs, window=compose_window)
+                if compose_window else None)
+    return ScheduledLoader(ds, sched, gbs=gbs, token_budget=256,
+                           vocab_size=512, random_baseline=random_baseline,
+                           seed=seed, prefetch=prefetch, composer=composer,
+                           item_source=item_source, metrics=metrics)
+
+
+def _take(loader, k):
+    out = []
+    it = iter(loader)
+    for _ in range(k):
+        batch = next(it, None)
+        if batch is None:
+            break
+        out.append((batch, loader.last_schedule))
+    return out
+
+
+def _assert_streams_equal(a, b):
+    assert len(a) == len(b)
+    for (ba, sa), (bb, sb) in zip(a, b):
+        for key in ("tokens", "labels", "segment_ids", "positions"):
+            np.testing.assert_array_equal(ba[key], bb[key], err_msg=key)
+        assert sa.groups == sb.groups
+        assert sa.cmax == sb.cmax
+        assert sa.solver == sb.solver
+
+
+# --------------------------------------------------------------------- #
+# prefetch ≡ sync
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("random_baseline", [False, True],
+                         ids=["scheduled", "random"])
+def test_prefetch_matches_sync(engine, random_baseline):
+    sync = _take(_loader(engine, prefetch=False,
+                         random_baseline=random_baseline), 6)
+    pre = _take(_loader(engine, prefetch=True,
+                        random_baseline=random_baseline), 6)
+    _assert_streams_equal(sync, pre)
+
+
+def test_prefetch_matches_sync_with_composer(engine):
+    sync = _take(_loader(engine, prefetch=False, compose_window=2), 6)
+    pre = _take(_loader(engine, prefetch=True, compose_window=2), 6)
+    _assert_streams_equal(sync, pre)
+
+
+def test_finite_source_prefetch_matches_sync_and_terminates(engine):
+    ds = MixedDataset("mixed", seed=11, tokens_per_media_item=TPM)
+    source = [ds.sample(8) for _ in range(5)]
+    sync = _take(_loader(engine, prefetch=False, item_source=source), 99)
+    pre = _take(_loader(engine, prefetch=True, item_source=source), 99)
+    assert len(sync) == 5
+    _assert_streams_equal(sync, pre)
+
+
+# --------------------------------------------------------------------- #
+# composer epoch = permutation of FIFO epoch
+# --------------------------------------------------------------------- #
+def test_composer_epoch_is_exact_permutation_of_fifo(engine):
+    ds = MixedDataset("mixed", seed=5, tokens_per_media_item=TPM)
+    source = [ds.sample(8) for _ in range(9)]
+    fifo = list(_loader(engine, prefetch=False,
+                        item_source=source)._item_batches())
+    composed = list(_loader(engine, prefetch=False, compose_window=3,
+                            item_source=source)._item_batches())
+    fifo_ids = [it.item_id for b in fifo for it in b]
+    comp_ids = [it.item_id for b in composed for it in b]
+    assert sorted(fifo_ids) == sorted(comp_ids)          # exact permutation
+    assert len(set(comp_ids)) == len(comp_ids)           # exactly once
+    assert sum(len(b) for b in composed) == 9 * 8
+
+
+def test_loader_surfaces_truncation_to_metrics(engine):
+    metrics = RuntimeMetrics()
+    # budget far below typical item length → guaranteed truncation
+    ds = MixedDataset("video", seed=2, tokens_per_media_item=TPM)
+    sched = engine.scheduler(plan=PLAN, adaptive=False,
+                             ilp_time_limit_s=0.02)
+    loader = ScheduledLoader(ds, sched, gbs=8, token_budget=64,
+                             vocab_size=512, seed=0, prefetch=False,
+                             metrics=metrics)
+    _take(loader, 3)
+    assert loader.total_truncated > 0
+    assert metrics.n_truncated_tokens == loader.total_truncated
+    assert metrics.truncated_tokens.count == 3   # one per global batch
+
+
+# --------------------------------------------------------------------- #
+# composer invariants (fast fake-duration scheduler)
+# --------------------------------------------------------------------- #
+class _FakeSched:
+    """Duck-typed stand-in: plan + per-item durations, no perf model."""
+
+    def __init__(self, plan=PLAN, tpm=4):
+        self.plan = plan
+        self.tpm = tpm
+        self.mode = "train"
+
+    def item_durations(self, items, plan=None):
+        e = np.array([it.encoder_batch() for it in items], float) + 0.1
+        l = np.array([it.llm_seq_len(self.tpm) for it in items], float)
+        return e, l
+
+
+def _stream(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return [DataItem(int(rng.integers(1, 9)), int(rng.integers(4, 200)),
+                     "multi_image", i) for i in range(n)]
+
+
+def _run_composer(items, *, gbs, window, max_staleness=None, plan=PLAN):
+    """Drive a composer over `items` in gbs-sized pushes; returns
+    (batches, wait) where wait[id] = composes spent in the window."""
+    comp = LookaheadComposer(_FakeSched(plan), gbs=gbs, window=window,
+                             max_staleness=max_staleness)
+    entered, waits, batches = {}, {}, []
+
+    def emit(batch):
+        for it in batch:
+            waits[it.item_id] = comp.batch_idx - 1 - entered[it.item_id]
+        batches.append(batch)
+
+    for s in range(0, len(items), gbs):
+        cohort = items[s:s + gbs]
+        for it in cohort:
+            entered[it.item_id] = comp.batch_idx
+        comp.push(cohort)
+        while comp.ready:
+            emit(comp.compose())
+    for b in comp.drain():
+        emit(b)
+    return batches, waits, comp
+
+
+def _check_invariants(items, batches, waits, comp):
+    out_ids = [it.item_id for b in batches for it in b]
+    assert sorted(out_ids) == sorted(it.item_id for it in items)
+    assert len(set(out_ids)) == len(out_ids)
+    assert max(waits.values()) <= comp.max_staleness
+    # full batches except possibly the tail of the drain
+    assert all(len(b) == comp.gbs for b in batches[:-1])
+
+
+@given(st.integers(1, 4), st.integers(3, 10), st.integers(1, 12),
+       st.integers(0, 3))
+@settings(max_examples=40, deadline=None)
+def test_composer_exactly_once_and_staleness_property(window, staleness,
+                                                      n_cohorts, seed):
+    staleness = max(staleness, window - 1)
+    gbs = 6
+    items = _stream(n_cohorts * gbs, seed)
+    batches, waits, comp = _run_composer(items, gbs=gbs, window=window,
+                                         max_staleness=staleness)
+    _check_invariants(items, batches, waits, comp)
+
+
+@pytest.mark.parametrize("window,staleness", [(1, 1), (2, 2), (3, 2),
+                                              (4, 3), (4, 8)])
+def test_composer_exactly_once_and_staleness(window, staleness):
+    """Deterministic twin of the property test (hypothesis optional)."""
+    gbs = 6
+    items = _stream(12 * gbs, seed=window + staleness)
+    batches, waits, comp = _run_composer(items, gbs=gbs, window=window,
+                                         max_staleness=staleness)
+    _check_invariants(items, batches, waits, comp)
+
+
+def test_composer_initial_fill_lockstep_respects_staleness():
+    """The whole W·gbs fill ages in lockstep — naive 'force at the bound'
+    would need W·gbs seats in one batch; the EDF reservation must spread
+    them instead."""
+    gbs, window = 4, 4
+    items = _stream(40 * gbs, seed=123)
+    # tightest legal bound: max_staleness = window - 1
+    batches, waits, comp = _run_composer(items, gbs=gbs, window=window,
+                                         max_staleness=window - 1)
+    _check_invariants(items, batches, waits, comp)
+
+
+def test_composer_push_overfill_raises():
+    comp = LookaheadComposer(_FakeSched(), gbs=4, window=2)
+    comp.push(_stream(8))
+    with pytest.raises(ValueError):
+        comp.push(_stream(1, seed=1))
+
+
+def test_composer_validates_staleness_vs_window():
+    with pytest.raises(ValueError):
+        LookaheadComposer(_FakeSched(), gbs=4, window=4, max_staleness=2)
+    with pytest.raises(ValueError):
+        LookaheadComposer(_FakeSched(), gbs=4, window=0)
+
+
+def test_composer_flush_reprices_window_on_plan_change(engine):
+    sched = engine.scheduler(plan=PLAN, adaptive=False,
+                             ilp_time_limit_s=0.02)
+    ds = MixedDataset("mixed", seed=9, tokens_per_media_item=TPM)
+    comp = LookaheadComposer(sched, gbs=8, window=2)
+    comp.push(ds.sample(8))
+    comp.push(ds.sample(8))
+    comp.compose()
+    priced_under_old = [(en.e, en.l) for en in comp._entries]
+    assert all(e >= 0 for e, _ in priced_under_old)
+    # hot-swap to a different TP degree: durations must change
+    sched.set_plan(ParallelismPlan(llm=ModuleParallelism(2, 1, 2),
+                                   encoder=ModuleParallelism(1, 1, 1),
+                                   n_mb=2))
+    comp.flush_plan()
+    assert comp.n_flushes == 1
+    assert all(en.e < 0 for en in comp._entries)         # invalidated
+    comp.compose()
+    assert comp._plan_key == sched.plan.as_tuple()
+
+
+def test_composer_auto_flushes_without_explicit_flush(engine):
+    """Even if the controller forgets flush_plan(), compose() re-checks
+    the plan identity — composition never prices under a stale θ*."""
+    sched = engine.scheduler(plan=PLAN, adaptive=False,
+                             ilp_time_limit_s=0.02)
+    ds = MixedDataset("mixed", seed=9, tokens_per_media_item=TPM)
+    comp = LookaheadComposer(sched, gbs=8, window=2)
+    comp.push(ds.sample(8))
+    comp.push(ds.sample(8))
+    comp.compose()
+    new_plan = ParallelismPlan(llm=ModuleParallelism(2, 1, 2),
+                               encoder=ModuleParallelism(1, 1, 1), n_mb=2)
+    sched.set_plan(new_plan)
+    comp.push(ds.sample(8))
+    comp.compose()
+    assert comp._plan_key == new_plan.as_tuple()
+
+
+def test_controller_wires_composer_telemetry_and_flush(engine):
+    ctl = engine.runtime(8, plan=PLAN, adaptive=False, calibrate=False,
+                         auto_replan=False, ilp_time_limit_s=0.02,
+                         compose_window=2)
+    comp = ctl.composer
+    assert comp is not None and comp.trace is ctl.trace \
+        and comp.metrics is ctl.metrics
+    ds = MixedDataset("mixed", seed=4, tokens_per_media_item=TPM)
+    ctl.composer.push(ds.sample(8))
+    batch = ctl.compose(ds.sample(8))
+    assert len(batch) == 8
+    assert ctl.metrics.n_composed == 1
+    assert ctl.metrics.compose_pred_gain.count == 1
+    ctl.close()
+
+
+def test_controller_compose_draw_warms_full_window(engine):
+    """ctl.compose(draw=...) must fill the whole W·gbs lookahead on the
+    first call and hold it at capacity thereafter — per-step composition
+    with real lookahead, no caller-side pre-fill."""
+    ctl = engine.runtime(8, plan=PLAN, adaptive=False, calibrate=False,
+                         auto_replan=False, ilp_time_limit_s=0.02,
+                         compose_window=3)
+    ds = MixedDataset("mixed", seed=4, tokens_per_media_item=TPM)
+    drawn = []
+
+    def draw():
+        b = ds.sample(8)
+        drawn.append(b)
+        return b
+
+    batch = ctl.compose(draw=draw)
+    assert len(batch) == 8
+    assert len(drawn) == 3                       # warmed W batches
+    assert ctl.composer.pending == 2 * 8         # window minus one batch
+    ctl.compose(draw=draw)
+    assert len(drawn) == 4                       # steady state: one draw
+    # no cold-window marker on the draw path
+    assert not any(e[1] == "compose-cold-window"
+                   for e in ctl.trace._events)
+    ctl.close()
+
+
+def test_controller_compose_cold_window_is_marked(engine):
+    """Per-step push of a single cohort never fills the window — zero
+    lookahead; the controller must flag it rather than silently
+    degenerate to FIFO."""
+    ctl = engine.runtime(8, plan=PLAN, adaptive=False, calibrate=False,
+                         auto_replan=False, ilp_time_limit_s=0.02,
+                         compose_window=4)
+    ds = MixedDataset("mixed", seed=4, tokens_per_media_item=TPM)
+    ctl.compose(ds.sample(8))
+    assert any(e[1] == "compose-cold-window" for e in ctl.trace._events)
+    ctl.close()
+
+
+def test_materialize_shapes_and_masks():
+    """Tensorization contract of the stub frontend (the path
+    `examples/train_mllm.build_batches` feeds the model from)."""
+    tpm = 8
+    ds = MixedDataset("mixed", seed=1, tokens_per_media_item=tpm)
+    items = ds.sample(4)
+    batch = ds.materialize(items, embed_dim=16, vocab_size=64,
+                           max_media=32, max_text=48)
+    assert batch["media_embeds"].shape == (4, 32, 16)
+    assert batch["text_tokens"].shape == (4, 48)
+    for i, it in enumerate(items):
+        assert batch["media_mask"][i].sum() == min(it.n_media_items * tpm, 32)
+        t = min(it.text_len, 48)
+        assert batch["text_mask"][i].sum() == t
+        # labels are next-token within the text span, -1 elsewhere
+        assert (batch["labels"][i, :t - 1] >= 0).all()
+        assert (batch["labels"][i, t - 1:] == -1).all()
+
+
+def test_item_shapes_matches_paper_keying():
+    from repro.data.items import item_shapes
+    it = DataItem(3, 100, "multi_image", 0)
+    b, s = item_shapes(it, tokens_per_media_item=8)
+    assert (b, s) == (3, 3 * 8 + 100)
+
+
+def test_sorted_runs_are_contiguous_and_capped():
+    durs = list(np.random.default_rng(0).random(20))
+    runs = sorted_runs(durs, k=5, max_candidates=6)
+    assert 1 <= len(runs) <= 6
+    order = list(np.argsort(-np.asarray(durs), kind="stable"))
+    for run in runs:
+        s = order.index(run[0])
+        assert list(run) == order[s:s + 5]       # contiguous in sorted order
+    assert sorted_runs(durs, k=21) == []
+
+
+# --------------------------------------------------------------------- #
+# fig18 acceptance (slow tier)
+# --------------------------------------------------------------------- #
+@pytest.mark.slow
+def test_fig18_composer_acceptance():
+    from benchmarks.fig18_composer import run
+    rows = run(n_batches=48)
+    summaries = {r["window"]: r for r in rows if r.get("summary")}
+    assert any(r["fifo_over_composed_makespan"] >= 1.15
+               for W, r in summaries.items() if W <= 4)
+    best = summaries[4]
+    assert best["recompiles_composed"] < best["recompiles_fifo"]

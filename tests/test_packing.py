@@ -3,7 +3,7 @@ import numpy as np
 from _hypothesis_compat import given, settings, st
 
 from repro.data.items import DataItem
-from repro.data.packing import greedy_bin_pack, pack_tokens
+from repro.data.packing import greedy_bin_pack, pack_items, pack_tokens
 
 
 def test_pack_tokens_labels_and_segments():
@@ -23,6 +23,51 @@ def test_pack_tokens_truncates_at_budget():
     pb = pack_tokens([np.arange(100)], budget=16)
     assert pb.used == 16
     assert pb.n_items == 1
+    assert pb.truncated == 84                   # dropped, but accounted
+    assert pb.padding == 0
+
+
+def test_pack_tokens_accounting_identity():
+    """No silent truncation: every input token is placed, counted as
+    truncated, or the row is padded — used + truncated == Σ len and
+    used + padding == budget, including whole sequences skipped once the
+    row is (nearly) full."""
+    cases = [
+        ([np.arange(5), np.arange(9)], 32),     # all fit, padding left
+        ([np.arange(100)], 16),                 # hard overflow
+        ([np.arange(10), np.arange(50), np.arange(7)], 16),  # skip tail
+        ([np.arange(16), np.arange(3)], 16),    # exact fill, seq skipped
+        ([np.arange(1)], 8),                    # len-1 seq unusable
+    ]
+    for seqs, budget in cases:
+        pb = pack_tokens(seqs, budget)
+        total = sum(len(s) for s in seqs)
+        assert pb.used + pb.truncated == total, (seqs, budget)
+        assert pb.used + pb.padding == budget, (seqs, budget)
+        assert int((pb.segment_ids[0] > 0).sum()) == pb.used
+
+
+@given(st.lists(st.integers(1, 80), min_size=1, max_size=12),
+       st.integers(8, 64))
+@settings(max_examples=100, deadline=None)
+def test_pack_tokens_accounting_identity_property(lengths, budget):
+    pb = pack_tokens([np.arange(n) for n in lengths], budget)
+    assert pb.used + pb.truncated == sum(lengths)
+    assert pb.used + pb.padding == budget
+
+
+def test_pack_items_counts_pre_clip_truncation():
+    """Items longer than the whole budget are clipped before token
+    generation; the clipped length still counts toward `truncated` so
+    the identity holds against the items' true lengths."""
+    rng = np.random.default_rng(0)
+    items = [DataItem(4, 100, "multi_image", 0),    # 4*8+100 = 132 > 64
+             DataItem(1, 10, "single_image", 1)]    # 18
+    pb = pack_items(items, budget=64, tokens_per_media_item=8,
+                    vocab=128, rng=rng)
+    total = sum(it.llm_seq_len(8) for it in items)
+    assert pb.used + pb.truncated == total
+    assert pb.used + pb.padding == 64
 
 
 @given(st.lists(st.integers(1, 50), min_size=1, max_size=40),

@@ -36,6 +36,7 @@ REQUIRED = [
     "docs/simulator.md",
     "docs/objectives.md",
     "docs/resharding.md",
+    "docs/data.md",
     "benchmarks/README.md",
 ]
 
@@ -45,6 +46,7 @@ DOCTEST_MODULES = [
     "repro.core.pipeline.simulator",
     "repro.core.optimizer.makespan",
     "repro.launch.reshard",
+    "repro.data.composer",
 ]
 
 # [text](target) — excluding images; target split from an optional title
