@@ -160,3 +160,33 @@ class DFLOPEngine:
             param_swapper=param_swapper,
             swap_horizon_batches=swap_horizon_batches,
             composer=composer)
+
+    # ------------------------------------------------------------------ #
+    def serving(self, *, admission: str = "slo", serve_cfg=None,
+                calibrate: bool = True, trace: bool = True,
+                drift: bool = True):
+        """Serving-side closed loop: returns a `repro.serve.ServeEngine`
+        whose admission pricing runs through this engine's profiled
+        `PerfModel` (``profile()`` first).  ``admission``: ``"slo"``
+        (data-aware `SLOAdmission`) or ``"fifo"`` (baseline); the trace /
+        metrics / calibrator / Page–Hinkley wiring mirrors ``runtime()``.
+        """
+        assert self.perf is not None, "call profile() first"
+        from repro.runtime import (OnlineCalibrator, RuntimeMetrics,
+                                   TraceRecorder)
+        from repro.runtime.drift import PageHinkley
+        from repro.serve import (FIFOAdmission, PrefillPricer, ServeConfig,
+                                 ServeEngine, SLOAdmission)
+        cfg = serve_cfg if serve_cfg is not None else ServeConfig()
+        cal = OnlineCalibrator() if calibrate else None
+        pricer = PrefillPricer(self.perf, self.tokens_per_media_item,
+                               tp=cfg.tp, calibrator=cal)
+        eng = ServeEngine(
+            pricer, cfg,
+            admission=(FIFOAdmission() if admission == "fifo" else None),
+            calibrator=cal,
+            drift=PageHinkley() if drift else None,
+            trace=TraceRecorder(enabled=trace,
+                                process_name="dflop-serve"),
+            metrics=RuntimeMetrics())
+        return eng

@@ -95,6 +95,32 @@ def sorted_runs(dominant: Sequence[float], k: int,
     return [tuple(int(j) for j in order[s:s + k]) for s in starts]
 
 
+def edf_forced_count(slack: Sequence[int], per_step: int) -> int:
+    """How many smallest-slack entries an EDF reservation must ship *now*
+    to keep every future deadline feasible.
+
+    ``slack[i]`` is the number of emission steps entry ``i`` can still
+    wait (0 = must go in the next batch; negative clamps to 0) and
+    ``per_step`` entries leave per step.  With ``n_j`` = count of entries
+    within ``j`` steps of their deadline, feasibility of *all* deadlines
+    needs ``max_j (n_j − j·per_step)`` departures immediately — forcing
+    only slack-0 entries is not enough when many entries age in lockstep.
+    Shared by the training-side `LookaheadComposer` (staleness deadlines)
+    and the serving-side SLO admission (latency deadlines), so the two
+    control loops cannot drift apart on the reservation rule.
+
+    >>> edf_forced_count([0, 0, 1, 5], per_step=2)
+    2
+    >>> edf_forced_count([1, 1, 5, 5], per_step=2)   # next step fits both
+    0
+    """
+    slack = np.maximum(np.asarray(slack, dtype=np.int64), 0)
+    if len(slack) == 0:
+        return 0
+    n_j = np.cumsum(np.bincount(slack))
+    return int(max(0, (n_j - np.arange(len(n_j)) * per_step).max()))
+
+
 def _pow2(x: int) -> int:
     """Smallest power of two >= max(x, 1).
 
@@ -295,8 +321,7 @@ class LookaheadComposer:
         # while the window invariant n_j <= (j+1)·gbs holds)
         slack = np.array([self.max_staleness - en.age
                           for en in self._entries])
-        n_j = np.cumsum(np.bincount(np.maximum(slack, 0)))
-        need = int(max(0, (n_j - np.arange(len(n_j)) * self.gbs).max()))
+        need = edf_forced_count(slack, self.gbs)
         order = np.argsort(slack, kind="stable")      # ties: arrival order
         forced = sorted(int(i) for i in order[:min(need, n)])
         forced_set = set(forced)

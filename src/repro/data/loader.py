@@ -9,15 +9,21 @@ fixed token budget.  Scheduling of batch t+1 overlaps step t via
 
 With a `LookaheadComposer` (``composer=``) the item flow becomes
 compose → schedule → pack: raw draws feed the composer's reorder window
-and the loader consumes *composed* global batches — same overlap with
-step t through the existing prefetch path (composition happens on the
-caller thread while the worker schedules).  See ``docs/data.md``.
+and the loader consumes *composed* global batches.  By default
+(``compose_prefetch=True``) the window refill runs on a background
+thread — global batch t+1 is pushed and composed while batch t is being
+scored/scheduled — with a depth-2 queue for backpressure; set
+``compose_prefetch=False`` to compose inline on the caller thread.  See
+``docs/data.md``.
 
 Determinism contract (pinned by ``tests/test_loader.py``): prefetch and
-sync modes yield batch-for-batch identical streams.  The two rng streams
+sync modes — and compose-prefetch vs. inline composition — yield
+batch-for-batch identical streams.  The two rng streams
 (schedule_random seeds vs. packing token draws) are split per concern —
 a single shared stream would be consumed in a different interleaving by
-the two modes.
+the two modes.  The compose worker is the *only* thread touching the
+composer, and window ordering never depends on consumer timing, so
+threading shifts when composition happens, not what it produces.
 """
 from __future__ import annotations
 
@@ -38,9 +44,13 @@ class ScheduledLoader:
                  random_baseline: bool = False, seed: int = 0,
                  prefetch: bool = True,
                  composer=None,
+                 compose_prefetch: bool = True,
                  item_source: Optional[Iterable[Sequence[DataItem]]] = None,
                  metrics=None):
         """composer: optional `repro.data.composer.LookaheadComposer`.
+        compose_prefetch: refill/compose the window on a background
+        thread (batch t+1 composed while t is scored); False composes
+        inline on the caller thread.  Streams are identical either way.
         item_source: optional finite iterable of item batches replacing
         ``dataset.global_batches(gbs)`` (epoch semantics: at exhaustion
         the composer window is drained, so every item is emitted exactly
@@ -62,6 +72,7 @@ class ScheduledLoader:
         self._pack_rng = np.random.default_rng([seed, 1])
         self.prefetch = prefetch
         self.composer = composer
+        self.compose_prefetch = compose_prefetch
         self.item_source = item_source
         self.metrics = metrics
         self.last_schedule: Optional[ScheduleOutput] = None
@@ -104,13 +115,70 @@ class ScheduledLoader:
                 "segment_ids": seg, "positions": pos}
 
     # ------------------------------------------------------------------ #
+    def _compose_stream(self, gen) -> Iterator[Sequence[DataItem]]:
+        """Background-thread composition: the window refill (push raw
+        draws, compose ready batches, drain at exhaustion) runs off the
+        caller thread, so global batch t+1 is composed while batch t is
+        being scored/scheduled.  A depth-2 queue provides backpressure;
+        the worker is the only thread touching the composer and executes
+        the exact push/compose/drain sequence of the inline path, so the
+        emitted stream is bit-identical (pinned by tests/test_loader.py).
+        Worker exceptions are re-raised on the caller; abandoning the
+        generator early stops the worker via the stop event."""
+        import queue as _queue
+        import threading
+        q: "_queue.Queue" = _queue.Queue(maxsize=2)
+        stop = threading.Event()
+        _END = object()
+
+        def _put(x) -> bool:
+            while not stop.is_set():
+                try:
+                    q.put(x, timeout=0.1)
+                    return True
+                except _queue.Full:
+                    continue
+            return False
+
+        def _work():
+            try:
+                for raw in gen:
+                    self.composer.push(raw)
+                    while self.composer.ready:
+                        if not _put(self.composer.compose()):
+                            return
+                for b in self.composer.drain():
+                    if not _put(b):
+                        return
+                _put(_END)
+            except BaseException as exc:   # surface on the caller thread
+                _put(exc)
+
+        worker = threading.Thread(target=_work, name="compose-prefetch",
+                                  daemon=True)
+        worker.start()
+        try:
+            while True:
+                got = q.get()
+                if got is _END:
+                    return
+                if isinstance(got, BaseException):
+                    raise got
+                yield got
+        finally:
+            stop.set()
+
     def _item_batches(self) -> Iterator[Sequence[DataItem]]:
         """Upstream global batches: FIFO draws, optionally re-composed
-        through the lookahead window."""
+        through the lookahead window (inline or on the compose-prefetch
+        thread)."""
         gen = (iter(self.item_source) if self.item_source is not None
                else self.dataset.global_batches(self.gbs))
         if self.composer is None:
             yield from gen
+            return
+        if self.compose_prefetch:
+            yield from self._compose_stream(gen)
             return
         for raw in gen:
             self.composer.push(raw)

@@ -161,7 +161,8 @@ def cache_specs(cfg: ModelConfig, caches_shapes, mesh, assignment: AxisAssignmen
         if path.endswith("/k") or path.endswith("/v"):
             spec = P(None, b or None, seq_axes or None, None, None)
         elif path.endswith("/kpos"):
-            spec = P(None, seq_axes or None)
+            # per-row validity: (n_blocks, B, C) — row dim follows k/v batch
+            spec = P(None, b or None, seq_axes or None)
         elif path.endswith("/conv"):
             spec = P(None, b or None, None, m or None)
         elif path.endswith("/ssm"):

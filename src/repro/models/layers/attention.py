@@ -259,7 +259,13 @@ _flash.defvjp(_flash_fwd_rule, _flash_bwd_rule)
 # Decode against a KV cache
 # --------------------------------------------------------------------------- #
 def attend_cache(q, cache_k, cache_v, kpos, pos, *, window=0, scale=None):
-    """Single-step decode. q: (B,1,H,D); cache_k/v: (B,C,Kh,D); kpos: (C,).
+    """Single-step decode. q: (B,1,H,D); cache_k/v: (B,C,Kh,D); kpos: (B,C).
+
+    ``pos`` is a scalar (lockstep batch) or a ``(B,)`` array — continuous
+    batching mixes requests at different decode positions in one batch, so
+    each row carries its own validity mask ``kpos[b] <= pos[b]``: a row
+    only ever attends to its own request's cache entries, never to stale
+    slots left by a request that previously occupied the row.
 
     The cache stays in its storage dtype end-to-end: upcasting it (or
     requesting f32 dot accumulation on the CPU backend) materializes an fp32
@@ -274,10 +280,11 @@ def attend_cache(q, cache_k, cache_v, kpos, pos, *, window=0, scale=None):
     scale = scale if scale is not None else D ** -0.5
     qg = q.reshape(B, Kh, G, D).astype(cache_k.dtype)
     s = jnp.einsum("bkgd,bskd->bkgs", qg, cache_k).astype(jnp.float32) * scale
-    valid = (kpos >= 0) & (kpos <= pos)
+    pos_b = jnp.reshape(jnp.asarray(pos, jnp.int32), (-1,))[:, None]  # (B|1,1)
+    valid = (kpos >= 0) & (kpos <= pos_b)
     if window and window > 0:
-        valid &= pos - kpos < window
-    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+        valid &= pos_b - kpos < window
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bkgs,bskd->bkgd", p.astype(cache_v.dtype), cache_v)
     return out.reshape(B, 1, H, D).astype(q.dtype)
@@ -288,24 +295,32 @@ def attend_cache(q, cache_k, cache_v, kpos, pos, *, window=0, scale=None):
 # --------------------------------------------------------------------------- #
 def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
     """KV cache for one attention layer. Sliding-window archs use a ring
-    buffer of size window (TPU-friendly: fixed shapes, modular write)."""
+    buffer of size window (TPU-friendly: fixed shapes, modular write).
+
+    ``kpos`` is per-row ``(batch, C)``: batch rows hold independent
+    requests under continuous batching, each with its own position clock
+    and validity mask."""
     C = min(max_len, cfg.window_size) if cfg.window_size else max_len
     return {
         "k": jnp.zeros((batch, C, cfg.n_kv_heads, cfg.head_dim), dtype),
         "v": jnp.zeros((batch, C, cfg.n_kv_heads, cfg.head_dim), dtype),
-        "kpos": jnp.full((C,), -1, jnp.int32),
+        "kpos": jnp.full((batch, C), -1, jnp.int32),
     }
 
 
 def cache_write(cache, k_new, v_new, pos):
-    """Write one token (k_new: (B,1,Kh,D)) at ring slot pos % C."""
-    C = cache["k"].shape[1]
-    slot = pos % C
+    """Write one token (k_new: (B,1,Kh,D)) at each row's ring slot
+    ``pos % C``.  ``pos``: scalar (all rows in lockstep) or ``(B,)``
+    per-row positions (continuous batching)."""
+    B, C = cache["k"].shape[0], cache["k"].shape[1]
+    pos_b = jnp.broadcast_to(
+        jnp.reshape(jnp.asarray(pos, jnp.int32), (-1,)), (B,))
+    slot = pos_b % C
+    rows = jnp.arange(B)
     return {
-        "k": jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), slot, axis=1),
-        "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), slot, axis=1),
-        "kpos": jax.lax.dynamic_update_slice_in_dim(
-            cache["kpos"], jnp.asarray([pos], jnp.int32), slot, axis=0),
+        "k": cache["k"].at[rows, slot].set(k_new[:, 0].astype(cache["k"].dtype)),
+        "v": cache["v"].at[rows, slot].set(v_new[:, 0].astype(cache["v"].dtype)),
+        "kpos": cache["kpos"].at[rows, slot].set(pos_b),
     }
 
 
@@ -318,7 +333,8 @@ def apply(params, x, cfg: ModelConfig, *, positions=None, segment_ids=None,
     """Self-attention layer.
 
     Train/prefill: cache is None, x is (B,S,d).
-    Decode: cache is the layer cache, x is (B,1,d), decode_pos a scalar.
+    Decode: cache is the layer cache, x is (B,1,d), decode_pos a scalar
+    or a (B,) array of per-row positions (continuous batching).
     Returns (y, new_cache).
     """
     B, S, d = x.shape
@@ -330,7 +346,9 @@ def apply(params, x, cfg: ModelConfig, *, positions=None, segment_ids=None,
     if cache is not None:
         pos = decode_pos
         if cfg.use_rope:
-            p = jnp.full((B, 1), pos)
+            # pos: scalar or (B,) per-row decode positions
+            p = jnp.broadcast_to(
+                jnp.reshape(jnp.asarray(pos), (-1, 1)), (B, 1))
             q = apply_rope(q, p, cfg.rope_theta)
             k = apply_rope(k, p, cfg.rope_theta)
         cache = cache_write(cache, k, v, pos)

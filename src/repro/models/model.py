@@ -285,7 +285,9 @@ def forward(params, cfg: ModelConfig, *, tokens=None, embeds=None,
 
 def decode_step(params, cfg: ModelConfig, token, caches, pos,
                 ctx: Optional[FwdCtx] = None):
-    """One decode step. token: (B,) int32 (or (B,1)); pos: scalar int."""
+    """One decode step. token: (B,) int32 (or (B,1)); pos: scalar int, or a
+    (B,) array of per-row positions when batch rows hold independent
+    requests at different depths (continuous batching — see repro.serve)."""
     ctx = ctx or FwdCtx(mode="decode", remat=False)
     ctx.mode = "decode"
     ctx.decode_pos = pos

@@ -40,6 +40,11 @@ class RollingStat:
     def last(self) -> float:
         return self._buf[-1] if self._buf else 0.0
 
+    def quantile(self, q: float) -> float:
+        """Windowed quantile (serving p50/p99 tails).  O(window log window)
+        — called at snapshot/report time, never on the hot path."""
+        return float(np.quantile(self._buf, q)) if self._buf else 0.0
+
     def __len__(self) -> int:
         return len(self._buf)
 
@@ -67,6 +72,22 @@ class RuntimeMetrics:
         self.n_composed = 0
         self.n_forced_items = 0
         self.n_truncated_tokens = 0
+        # -- serving (repro.serve.engine) ------------------------------- #
+        # latency/ttft keep a wider window: p99 over 256 samples is noise
+        self.queue_depth = RollingStat(window)
+        self.batch_occupancy = RollingStat(window)   # decode rows / slots
+        self.prefill_batch_s = RollingStat(window)
+        self.decode_step_s = RollingStat(window)
+        self.latency_s = RollingStat(max(window, 2048))
+        self.ttft_s = RollingStat(max(window, 2048))
+        self.n_requests = 0
+        self.n_admitted = 0
+        self.n_prefill_batches = 0
+        self.n_decode_steps = 0
+        self.n_handoffs = 0
+        self.n_completed = 0
+        self.n_slo_met = 0
+        self.n_serve_compiles = 0
 
     # ------------------------------------------------------------------ #
     def record_schedule(self, out) -> None:
@@ -113,6 +134,30 @@ class RuntimeMetrics:
         self.truncated_tokens.add(truncated)
         self.n_truncated_tokens += int(truncated)
 
+    # ------------------------------------------------------------------ #
+    # Serving-side counters (`repro.serve.engine` is the only writer).
+    def record_admission(self, queue_depth: int, batch_size: int,
+                         duration_s: float) -> None:
+        """One prefill batch admitted (duration_s: emulated batch time)."""
+        self.queue_depth.add(queue_depth)
+        self.prefill_batch_s.add(duration_s)
+        self.n_admitted += batch_size
+        self.n_prefill_batches += 1
+
+    def record_decode_step(self, occupancy: float, duration_s: float) -> None:
+        """One continuous-batch decode step (occupancy: rows / slots)."""
+        self.batch_occupancy.add(occupancy)
+        self.decode_step_s.add(duration_s)
+        self.n_decode_steps += 1
+
+    def record_completion(self, latency_s: float, ttft_s: float,
+                          slo_met: bool) -> None:
+        self.latency_s.add(latency_s)
+        if ttft_s >= 0:
+            self.ttft_s.add(ttft_s)
+        self.n_completed += 1
+        self.n_slo_met += bool(slo_met)
+
     def record_prediction(self, module: str, predicted: float,
                           actual: float) -> None:
         if predicted <= 0 or actual <= 0:
@@ -145,4 +190,21 @@ class RuntimeMetrics:
                                   for p, s in sorted(self.stage_util.items())},
             "pred_error": {m: s.mean()
                            for m, s in sorted(self.pred_error.items())},
+            "serve": {
+                "n_requests": self.n_requests,
+                "n_admitted": self.n_admitted,
+                "n_prefill_batches": self.n_prefill_batches,
+                "n_decode_steps": self.n_decode_steps,
+                "n_handoffs": self.n_handoffs,
+                "n_completed": self.n_completed,
+                "n_slo_met": self.n_slo_met,
+                "n_serve_compiles": self.n_serve_compiles,
+                "queue_depth_mean": self.queue_depth.mean(),
+                "batch_occupancy_mean": self.batch_occupancy.mean(),
+                "prefill_batch_mean_s": self.prefill_batch_s.mean(),
+                "decode_step_mean_s": self.decode_step_s.mean(),
+                "latency_p50_s": self.latency_s.quantile(0.50),
+                "latency_p99_s": self.latency_s.quantile(0.99),
+                "ttft_p50_s": self.ttft_s.quantile(0.50),
+            },
         }

@@ -1,3 +1,14 @@
-from repro.serve.steps import make_decode_step, make_prefill_step
+from repro.serve.admission import FIFOAdmission, PrefillPricer, SLOAdmission
+from repro.serve.engine import ServeConfig, ServeEngine, ServeReport
+from repro.serve.request import Request, RequestQueue
+from repro.serve.steps import (clear_cache_row, greedy_generate,
+                               make_decode_step, make_prefill_step,
+                               merge_cache_row, prefill_into_cache)
 
-__all__ = ["make_decode_step", "make_prefill_step"]
+__all__ = [
+    "FIFOAdmission", "PrefillPricer", "SLOAdmission",
+    "ServeConfig", "ServeEngine", "ServeReport",
+    "Request", "RequestQueue",
+    "clear_cache_row", "greedy_generate", "make_decode_step",
+    "make_prefill_step", "merge_cache_row", "prefill_into_cache",
+]

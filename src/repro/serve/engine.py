@@ -1,0 +1,341 @@
+"""Data-aware serving engine: admission → prefill pool → KV handoff →
+continuous-batch decode pool, as a deterministic discrete-event emulation.
+
+DFLOP's training loop (profile → plan → schedule → observe → re-plan)
+maps onto inference as:
+
+  * **profile**  — the same `PerfModel` prices per-request prefill cost
+    (`PrefillPricer`, via ``e_dur``/``l_dur``) and per-token decode cost
+    (decode-mode FLOPs, affine in the context length);
+  * **schedule** — the admission policy forms prefill batches
+    (`SLOAdmission`: EDF deadline reservation + homogeneous-run scoring;
+    `FIFOAdmission`: arrival order);
+  * **observe**  — every executed prefill batch feeds the
+    `OnlineCalibrator` with (predicted base, actual) and the residual
+    stream into a `PageHinkley` drift test;
+  * **re-plan**  — a drift event flushes the pricer's memoized admission
+    prices so they are re-estimated under the post-drift calibration.
+
+Disaggregation follows DistTrain's phase split: prefill and decode run on
+*separate* emulated worker pools with an explicit KV-handoff step priced
+as bytes/bandwidth + latency.  Decode is continuously batched — requests
+join and leave a worker's batch only at step boundaries, and the batch is
+padded to a power-of-two occupancy so a real jit cache would see a
+bounded set of shapes (each novel (pool, bucket) pays ``compile_s``, same
+convention as the composer's recompile penalty).
+
+Ground truth comes from each request's ``true_factor`` (drawn by the load
+generator: per-modality bias × lognormal noise): actual durations are
+predicted *base* durations scaled by it, plus deterministic padding
+overhead.  Identical request streams therefore produce bit-identical
+ground truth under any admission policy — the fig19 A/B is exact.
+
+Virtual time is seconds; nothing here touches a wall clock, so runs are
+reproducible and fast (numpy + heapq only).
+
+>>> ServeConfig(decode_slots=8).decode_slots
+8
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.data.composer import _pow2
+from repro.serve.admission import FIFOAdmission, PrefillPricer, SLOAdmission
+from repro.serve.request import (DECODING, DONE, HANDOFF, PREFILLING,
+                                 Request, RequestQueue)
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    """Emulated serving cluster + engine knobs."""
+
+    n_prefill_workers: int = 2
+    n_decode_workers: int = 2
+    decode_slots: int = 8            # continuous-batch rows per decode worker
+    max_prefill_batch: int = 8
+    tp: int = 1                      # per-worker tensor parallelism
+    compile_s: float = 0.25          # opening a novel (pool, shape) bucket
+    kv_bandwidth_gbps: float = 64.0  # prefill → decode interconnect
+    kv_latency_s: float = 0.002
+    kv_bytes_per_value: int = 2      # bf16 KV cache
+
+
+@dataclass
+class ServeReport:
+    """Headline numbers of one `ServeEngine.run` (fig19 rows come from
+    this; percentiles over *all* completions, not the metrics window)."""
+
+    policy: str
+    n_requests: int
+    n_completed: int
+    n_slo_met: int
+    makespan_s: float
+    goodput_rps: float               # SLO-met completions per second
+    throughput_rps: float
+    p50_latency_s: float
+    p99_latency_s: float
+    mean_ttft_s: float
+    mean_queue_depth: float
+    mean_occupancy: float
+    n_prefill_batches: int
+    n_decode_steps: int
+    n_drift_events: int
+    n_compiles: int
+
+    def row(self) -> dict:
+        return dict(self.__dict__)
+
+
+class _DecodeWorker:
+    __slots__ = ("idx", "active", "busy")
+
+    def __init__(self, idx: int):
+        self.idx = idx
+        self.active: List[Request] = []
+        self.busy = False                  # a decode_step event is in flight
+
+
+class ServeEngine:
+    """Event-driven admission/batching loop over a live request stream."""
+
+    def __init__(self, pricer: PrefillPricer, cfg: ServeConfig = ServeConfig(),
+                 *, admission=None, calibrator=None, drift=None,
+                 trace=None, metrics=None):
+        """``admission``: policy with ``select(pending, now_s, max_batch)``
+        and ``note_batch(duration_s)`` (default: `SLOAdmission` around
+        ``pricer``).  ``calibrator``/``drift``/``trace``/``metrics`` are
+        the runtime-layer hooks (`OnlineCalibrator`, `PageHinkley`,
+        `TraceRecorder`, `RuntimeMetrics`); any may be None."""
+        self.pricer = pricer
+        self.cfg = cfg
+        self.admission = admission if admission is not None \
+            else SLOAdmission(pricer, handoff_s=self._handoff_s_mean())
+        self.calibrator = calibrator
+        self.drift = drift
+        self.trace = trace
+        self.metrics = metrics
+        self.queue = RequestQueue()
+        self.n_drift_events = 0
+        self.n_compiles = 0
+        self._prefill_busy = [False] * cfg.n_prefill_workers
+        self._decode = [_DecodeWorker(i) for i in range(cfg.n_decode_workers)]
+        self._ready: List[Request] = []    # handoff done, awaiting a slot
+        self._seen_prefill_shapes: set = set()
+        self._seen_decode_shapes: set = set()
+        self._completed: List[Request] = []
+        self._heap: List[tuple] = []
+        self._seq = 0                      # heap tie-break, keeps FIFO order
+
+    # ------------------------------------------------------------------ #
+    def _kv_bytes(self, seq_len: int) -> float:
+        c = self.pricer.perf.llm.cfg
+        kv_heads = c.n_kv_heads or c.n_heads or 1
+        head_dim = c.head_dim or (c.d_model // max(c.n_heads, 1))
+        return 2.0 * c.n_layers * kv_heads * head_dim \
+            * self.cfg.kv_bytes_per_value * seq_len
+
+    def _handoff_s(self, req: Request) -> float:
+        _, _, s = self.pricer.base(req)
+        return (self._kv_bytes(s) / (self.cfg.kv_bandwidth_gbps * 1e9)
+                + self.cfg.kv_latency_s)
+
+    def _handoff_s_mean(self) -> float:
+        """Rough per-request handoff estimate for admission slack."""
+        return self._kv_bytes(1024) / (self.cfg.kv_bandwidth_gbps * 1e9) \
+            + self.cfg.kv_latency_s
+
+    def _push(self, t: float, kind: str, payload=None) -> None:
+        heapq.heappush(self._heap, (t, self._seq, kind, payload))
+        self._seq += 1
+
+    # ------------------------------------------------------------------ #
+    def run(self, requests: Sequence[Request]) -> ServeReport:
+        """Serve a finite open-loop stream to completion."""
+        if self.metrics is not None:
+            self.metrics.n_requests += len(requests)
+        for r in sorted(requests, key=lambda r: r.arrival_s):
+            self._push(r.arrival_s, "arrival", r)
+        while self._heap:
+            t, _, kind, payload = heapq.heappop(self._heap)
+            if kind == "arrival":
+                self.queue.push(payload)
+                self._try_admit(t)
+            elif kind == "prefill_done":
+                self._on_prefill_done(t, *payload)
+            elif kind == "handoff_done":
+                self._on_handoff_done(t, payload)
+            elif kind == "decode_step":
+                self._decode_step(t, payload)
+        return self._report(requests)
+
+    # ------------------------------------------------------------------ #
+    # Prefill pool
+    def _try_admit(self, t: float) -> None:
+        for w in range(self.cfg.n_prefill_workers):
+            if self._prefill_busy[w]:
+                continue
+            batch = self.admission.select(self.queue.pending, t,
+                                          self.cfg.max_prefill_batch)
+            if not batch:
+                return
+            depth = self.queue.depth
+            self.queue.pop(batch)
+            s_pad = _pow2(max(self.pricer.base(r)[2] for r in batch))
+            dur = 0.0
+            for r in batch:
+                r.status = PREFILLING
+                r.admit_s = t
+                base, _, _ = self.pricer.base(r)
+                dur += base * r.true_factor + self.pricer.pad_extra(r, s_pad)
+            key = (_pow2(len(batch)), s_pad)
+            if key not in self._seen_prefill_shapes:
+                self._seen_prefill_shapes.add(key)
+                dur += self.cfg.compile_s
+                self.n_compiles += 1
+                if self.metrics is not None:
+                    self.metrics.n_serve_compiles += 1
+            self._prefill_busy[w] = True
+            self.admission.note_batch(dur)
+            if self.metrics is not None:
+                self.metrics.record_admission(depth, len(batch), dur)
+            if self.trace is not None:
+                self.trace.complete("prefill", t * 1e6, dur * 1e6,
+                                    cat="serve", tid=100 + w,
+                                    args={"batch": len(batch),
+                                          "s_pad": s_pad, "queue": depth})
+                self.trace.counter("serve_queue_depth", depth - len(batch))
+            self._push(t + dur, "prefill_done", (w, batch))
+
+    def _on_prefill_done(self, t: float, w: int, batch: List[Request]) -> None:
+        self._prefill_busy[w] = False
+        for r in batch:
+            r.status = HANDOFF
+            r.prefill_done_s = t
+            self._observe(r)
+            if self.metrics is not None:
+                self.metrics.n_handoffs += 1
+            self._push(t + self._handoff_s(r), "handoff_done", r)
+        self._try_admit(t)
+
+    def _observe(self, r: Request) -> None:
+        """observe → (maybe) re-estimate: calibration learns the residual
+        heterogeneity the perf model can't see; Page–Hinkley watches the
+        post-calibration residual stream and a fire flushes the memoized
+        admission prices (re-priced under the new calibration)."""
+        base, _, s = self.pricer.base(r)
+        actual = base * r.true_factor
+        if self.calibrator is not None:
+            corrected = self.calibrator.correct("prefill", s,
+                                                self.pricer.tp, base)
+            self.calibrator.observe("prefill", s, self.pricer.tp, base,
+                                    actual)
+        else:
+            corrected = base
+        if self.metrics is not None:
+            self.metrics.record_prediction("prefill", corrected, actual)
+        if self.drift is not None:
+            if self.drift.update(abs(actual / corrected - 1.0)):
+                self.n_drift_events += 1
+                self.pricer.flush()
+                self.drift.reset()
+                if self.metrics is not None:
+                    self.metrics.n_drift_events += 1
+                if self.trace is not None:
+                    self.trace.instant("serve_drift_reprice", cat="serve")
+
+    # ------------------------------------------------------------------ #
+    # Decode pool (continuous batching)
+    def _on_handoff_done(self, t: float, r: Request) -> None:
+        r.status = DECODING
+        r.handoff_done_s = t
+        self._ready.append(r)
+        # wake every idle worker: each pulls its share of the ready list at
+        # its (immediate) step boundary; surplus wakes are no-ops
+        for dw in self._decode:
+            if not dw.busy:
+                dw.busy = True
+                self._push(t, "decode_step", dw.idx)
+
+    def _decode_step(self, t: float, idx: int) -> None:
+        dw = self._decode[idx]
+        # join/leave ONLY here — a step boundary of this worker
+        while self._ready and len(dw.active) < self.cfg.decode_slots:
+            r = self._ready.pop(0)
+            r.decode_worker = idx
+            dw.active.append(r)
+        if not dw.active:
+            dw.busy = False
+            return
+        n = len(dw.active)
+        pad = _pow2(n) / n                 # pow2-bucketed batch occupancy
+        dur = 0.0
+        for r in dw.active:
+            _, _, s = self.pricer.base(r)
+            c = s + r.tokens_done
+            dur += self.pricer.decode_tok_s(c) * r.true_factor
+        dur *= pad
+        key = _pow2(n)
+        if key not in self._seen_decode_shapes:
+            self._seen_decode_shapes.add(key)
+            dur += self.cfg.compile_s
+            self.n_compiles += 1
+            if self.metrics is not None:
+                self.metrics.n_serve_compiles += 1
+        end = t + dur
+        finished = []
+        for r in dw.active:
+            r.tokens_done += 1
+            if r.first_token_s < 0:
+                r.first_token_s = end
+            if r.tokens_done >= r.max_new_tokens:
+                r.status = DONE
+                r.finish_s = end
+                finished.append(r)
+        if finished:
+            dw.active = [r for r in dw.active if r.status != DONE]
+            for r in finished:
+                self._completed.append(r)
+                if self.metrics is not None:
+                    self.metrics.record_completion(r.latency_s, r.ttft_s,
+                                                   r.slo_met)
+        if self.metrics is not None:
+            self.metrics.record_decode_step(n / self.cfg.decode_slots, dur)
+        if self.trace is not None:
+            self.trace.complete("decode_step", t * 1e6, dur * 1e6,
+                                cat="serve", tid=200 + idx,
+                                args={"rows": n, "finished": len(finished)})
+            self.trace.counter("serve_occupancy",
+                               n / self.cfg.decode_slots)
+        self._push(end, "decode_step", idx)
+
+    # ------------------------------------------------------------------ #
+    def _report(self, requests: Sequence[Request]) -> ServeReport:
+        done = self._completed
+        lat = np.array([r.latency_s for r in done]) if done else np.zeros(1)
+        ttft = np.array([r.ttft_s for r in done if r.ttft_s >= 0])
+        makespan = max((r.finish_s for r in done), default=0.0)
+        n_slo = sum(r.slo_met for r in done)
+        m = self.metrics
+        return ServeReport(
+            policy=getattr(self.admission, "name", "custom"),
+            n_requests=len(requests),
+            n_completed=len(done),
+            n_slo_met=n_slo,
+            makespan_s=makespan,
+            goodput_rps=n_slo / max(makespan, 1e-12),
+            throughput_rps=len(done) / max(makespan, 1e-12),
+            p50_latency_s=float(np.quantile(lat, 0.5)),
+            p99_latency_s=float(np.quantile(lat, 0.99)),
+            mean_ttft_s=float(ttft.mean()) if len(ttft) else 0.0,
+            mean_queue_depth=m.queue_depth.mean() if m else 0.0,
+            mean_occupancy=m.batch_occupancy.mean() if m else 0.0,
+            n_prefill_batches=m.n_prefill_batches if m else 0,
+            n_decode_steps=m.n_decode_steps if m else 0,
+            n_drift_events=self.n_drift_events,
+            n_compiles=self.n_compiles,
+        )

@@ -3,6 +3,21 @@
 Decode shapes in the assignment lower `serve_step`: ONE new token against a
 KV cache of `seq_len` — the cache arrays are step inputs/outputs so the
 dry-run shards them like real serving state.
+
+Continuous batching (repro.serve.engine drives this at emulation scale;
+the helpers here are the real-model substrate):
+
+  * the decode batch dimension holds *independent requests* — ``pos`` may
+    be a ``(B,)`` array of per-row positions, and each row's attention
+    only sees its own cache entries (per-row ``kpos`` validity masks, see
+    `repro.models.layers.attention.attend_cache`);
+  * requests join/leave the batch only between decode steps:
+    `clear_cache_row` resets a vacated row and `merge_cache_row` copies a
+    prefilled single-request cache into it (the KV handoff of
+    prefill/decode disaggregation);
+  * `prefill_into_cache` is the prefill-worker half: one request at its
+    exact length (no padding), returning the last-token logits plus the
+    cache to hand off.
 """
 from __future__ import annotations
 
@@ -23,7 +38,12 @@ def make_prefill_step(cfg: ModelConfig, ctx: Optional[FwdCtx] = None,
     Serving prefill only needs the *last* position's logits (next-token
     sampling) — materializing the (B, S, vocab) tensor at 32k × 200k-vocab
     would be tens of GB per chip for no reason.  Encoder-only models
-    (`causal=False`) keep the full output (their "prefill" is encoding)."""
+    (`causal=False`) keep the full output (their "prefill" is encoding).
+
+    Batched prompts are right-padded to a shared S; ``batch["lengths"]``
+    ((B,) actual prompt lengths) selects each request's *own* last valid
+    position — without it row b's "last token" would be padding for every
+    request shorter than the batch max."""
     import dataclasses
 
     ctx = ctx or FwdCtx(mode="prefill", remat=False)
@@ -42,7 +62,13 @@ def make_prefill_step(cfg: ModelConfig, ctx: Optional[FwdCtx] = None,
                                           ctx=ctx)
         if ctx.return_hidden:
             from repro.models.layers import embed as embed_lib
-            h_last = out[:, -1:]
+            lengths = batch.get("lengths")
+            if lengths is not None:
+                idx = jnp.clip(jnp.asarray(lengths, jnp.int32) - 1, 0,
+                               out.shape[1] - 1)
+                h_last = jnp.take_along_axis(out, idx[:, None, None], axis=1)
+            else:
+                h_last = out[:, -1:]
             if cfg.tie_embeddings or "unembed" not in params:
                 return embed_lib.decode(params["embed"], h_last)
             return embed_lib.unembed(params["unembed"], h_last)
@@ -52,7 +78,10 @@ def make_prefill_step(cfg: ModelConfig, ctx: Optional[FwdCtx] = None,
 
 
 def make_decode_step(cfg: ModelConfig, ctx: Optional[FwdCtx] = None) -> Callable:
-    """decode(params, caches, tokens (B,), pos ()) -> (logits, caches)."""
+    """decode(params, caches, tokens (B,), pos () or (B,)) -> (logits, caches).
+
+    A ``(B,)`` pos array decodes a continuous batch: rows advance their own
+    position clocks, so requests at different depths share one step."""
     import dataclasses
 
     base_ctx = ctx
@@ -84,3 +113,61 @@ def greedy_generate(cfg: ModelConfig, params, prompt, max_new: int,
             tok = jnp.argmax(logits, axis=-1).astype(prompt.dtype)
         out.append(tok)
     return jnp.stack(out, axis=1)
+
+
+# --------------------------------------------------------------------------- #
+# Disaggregated prefill/decode: KV handoff between worker pools
+# --------------------------------------------------------------------------- #
+def prefill_into_cache(cfg: ModelConfig, params, prompt, max_len: int,
+                       kv_dtype=jnp.float32, ctx: Optional[FwdCtx] = None):
+    """Prefill-worker step: run one request's prompt (B, S) — typically
+    B = 1, exact length, no padding — through the cached decode path,
+    returning ``(last_logits (B, vocab), caches)``.
+
+    The returned cache is the KV state to hand off to a decode worker
+    (`merge_cache_row`); the logits sample the first generated token.
+    Teacher-forcing through `decode_step` keeps prefill and decode on the
+    *same* numerical path, which is what makes the handoff bit-exact
+    (tests/test_serve_engine.py pins continued decode against a request
+    that never left its private cache)."""
+    B, S = prompt.shape
+    caches = model_lib.init_cache(cfg, B, max_len, kv_dtype)
+    decode = jax.jit(make_decode_step(cfg, ctx))
+    logits = None
+    for t in range(S):
+        logits, caches = decode(params, caches, prompt[:, t], t)
+    return logits, caches
+
+
+def clear_cache_row(caches, row: int):
+    """Reset batch row ``row`` of a stacked cache pytree to the fresh-init
+    state (zeros for KV/SSM state, −1 for ``kpos`` validity) — called when
+    a request leaves the continuous batch so the next occupant never sees
+    its predecessor's entries.  Leaf layout: (n_blocks, B, ...)."""
+    def reset(a):
+        fill = -1 if jnp.issubdtype(a.dtype, jnp.integer) else 0
+        return a.at[:, row].set(fill)
+
+    return jax.tree.map(reset, caches)
+
+
+def merge_cache_row(dst, src, row: int, src_row: int = 0):
+    """KV handoff: copy request ``src_row`` of a prefill-worker cache into
+    batch row ``row`` of a decode-worker cache.
+
+    The source's sequence capacity may be smaller than the destination's
+    (prefill caches are sized to the prompt): entries land in the leading
+    destination slots, which is exact because slot = pos % C and prefill
+    only wrote pos < C_src ≤ C_dst.  Ring-buffer (sliding-window) caches
+    clamp both capacities to the window, so their slot maps agree too.
+    The row is reset first — stale entries past the source capacity must
+    not survive the handoff."""
+    def place(d, s):
+        s_r = s[:, src_row].astype(d.dtype)
+        if d.shape[2:] == s.shape[2:]:
+            return d.at[:, row].set(s_r)
+        fill = -1 if jnp.issubdtype(d.dtype, jnp.integer) else 0
+        d = d.at[:, row].set(fill)
+        return d.at[:, row, : s.shape[2]].set(s_r)
+
+    return jax.tree.map(place, dst, src)

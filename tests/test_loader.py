@@ -51,7 +51,7 @@ def engine():
 
 def _loader(engine, *, prefetch, random_baseline=False, compose_window=0,
             gbs=8, seed=3, item_source=None, metrics=None,
-            dataset_seed=7):
+            dataset_seed=7, compose_prefetch=True):
     """A fresh loader with its own scheduler/dataset/composer so the two
     modes under comparison share no mutable state."""
     ds = MixedDataset("mixed", seed=dataset_seed, tokens_per_media_item=TPM)
@@ -62,6 +62,7 @@ def _loader(engine, *, prefetch, random_baseline=False, compose_window=0,
     return ScheduledLoader(ds, sched, gbs=gbs, token_budget=256,
                            vocab_size=512, random_baseline=random_baseline,
                            seed=seed, prefetch=prefetch, composer=composer,
+                           compose_prefetch=compose_prefetch,
                            item_source=item_source, metrics=metrics)
 
 
@@ -103,6 +104,68 @@ def test_prefetch_matches_sync_with_composer(engine):
     sync = _take(_loader(engine, prefetch=False, compose_window=2), 6)
     pre = _take(_loader(engine, prefetch=True, compose_window=2), 6)
     _assert_streams_equal(sync, pre)
+
+
+# --------------------------------------------------------------------- #
+# compose-prefetch thread ≡ inline composition
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("prefetch", [False, True], ids=["sync", "prefetch"])
+def test_compose_prefetch_matches_inline(engine, prefetch):
+    """The window refill running off the caller thread must be a pure
+    latency optimization: batch-for-batch identical tensors AND schedules
+    versus inline composition, in both loader modes."""
+    inline = _take(_loader(engine, prefetch=prefetch, compose_window=3,
+                           compose_prefetch=False), 8)
+    threaded = _take(_loader(engine, prefetch=prefetch, compose_window=3,
+                             compose_prefetch=True), 8)
+    _assert_streams_equal(inline, threaded)
+
+
+def test_compose_prefetch_finite_source_exactly_once(engine):
+    """Thread + drain on a finite epoch: terminates, and the composed
+    epoch is still an exact permutation (no lost or duplicated items at
+    the queue/drain boundary)."""
+    ds = MixedDataset("mixed", seed=13, tokens_per_media_item=TPM)
+    source = [ds.sample(8) for _ in range(7)]
+    inline = _take(_loader(engine, prefetch=False, compose_window=2,
+                           compose_prefetch=False, item_source=source), 99)
+    threaded = _take(_loader(engine, prefetch=False, compose_window=2,
+                             compose_prefetch=True, item_source=source), 99)
+    assert len(inline) == 7
+    _assert_streams_equal(inline, threaded)
+
+
+def test_compose_prefetch_worker_error_surfaces_on_caller(engine):
+    """An exception inside the compose worker must re-raise on the caller
+    thread, not hang the queue or die silently on a daemon thread."""
+    def bad_source():
+        ds = MixedDataset("mixed", seed=13, tokens_per_media_item=TPM)
+        yield ds.sample(8)
+        yield ds.sample(8)
+        raise RuntimeError("upstream storage failure")
+
+    loader = _loader(engine, prefetch=False, compose_window=2,
+                     compose_prefetch=True, item_source=bad_source())
+    with pytest.raises(RuntimeError, match="upstream storage failure"):
+        _take(loader, 99)
+
+
+def test_compose_prefetch_early_abandon_stops_worker(engine):
+    """Dropping the iterator mid-epoch must release the worker (stop
+    event) instead of leaving it blocked on a full queue forever."""
+    import threading
+    import time
+    loader = _loader(engine, prefetch=False, compose_window=2)
+    it = iter(loader)
+    next(it)
+    it.close()                      # fires the generator's finally → stop
+    for _ in range(100):            # worker re-checks stop every 0.1s
+        alive = [t for t in threading.enumerate()
+                 if t.name == "compose-prefetch" and t.is_alive()]
+        if not alive:
+            break
+        time.sleep(0.05)
+    assert not alive
 
 
 def test_finite_source_prefetch_matches_sync_and_terminates(engine):

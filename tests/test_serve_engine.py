@@ -1,0 +1,426 @@
+"""Contract tests for `repro.serve` — the data-aware serving engine.
+
+Three layers, mirroring the subsystem's own split:
+
+  * admission (pure policy): EDF slack ordering, the no-starvation
+    backstop under a sustained adversarial stream, and FIFO degeneration;
+  * emulated engine (discrete-event): continuous-batching invariants
+    (joins/leaves only at step boundaries, non-overlapping worker steps),
+    prefill → KV-handoff → decode timing, drift → re-price wiring,
+    metrics plumbing, and run-to-run determinism;
+  * real-model substrate (tiny jax model): a request prefilled on a
+    "prefill worker" cache, handed off via `merge_cache_row` into a
+    shared continuous decode batch, must generate the same tokens as the
+    request decoding alone — including after `clear_cache_row` recycles
+    its row for a new occupant.
+
+The fig19 acceptance numbers live in the slow tier.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.common.types import ModelConfig
+from repro.core.engine import DFLOPEngine
+from repro.core.optimizer.space import ClusterSpec
+from repro.data.items import DataItem
+from repro.models import model as model_lib
+from repro.serve import (FIFOAdmission, PrefillPricer, Request, RequestQueue,
+                         ServeConfig, SLOAdmission, clear_cache_row,
+                         make_decode_step, merge_cache_row,
+                         prefill_into_cache)
+
+TPM = 64
+
+ENC = ModelConfig(name="e", family="vlm-enc", n_layers=4, d_model=256,
+                  n_heads=4, n_kv_heads=4, d_ff=1024, vocab_size=0,
+                  causal=False, use_rope=False, input_embed_dim=64,
+                  has_lm_head=False)
+LLM = ModelConfig(name="l", family="dense", n_layers=8, d_model=512,
+                  n_heads=8, n_kv_heads=8, d_ff=2048, vocab_size=8192)
+
+
+@pytest.fixture(scope="module")
+def engine():
+    from repro.data.synthetic import MixedDataset
+    ds = MixedDataset("mixed", seed=0, tokens_per_media_item=TPM)
+    eng = DFLOPEngine(llm_cfg=LLM, enc_cfg=ENC, e_seq_len=64,
+                      cluster=ClusterSpec(n_chips=16, chips_per_node=8,
+                                          mem_bytes=80e9),
+                      tokens_per_media_item=TPM)
+    eng.profile(ds, n_samples=256)
+    return eng
+
+
+def _req(i, *, arrival=0.0, slo=60.0, n_media=1, text=128,
+         modality="single_image", max_new=8, factor=1.0):
+    return Request(item=DataItem(n_media, text, modality, i),
+                   arrival_s=arrival, slo_s=slo, max_new_tokens=max_new,
+                   true_factor=factor)
+
+
+def _requests(n, seed=0, **kw):
+    rng = np.random.default_rng(seed)
+    return [_req(i, arrival=float(i) * 0.05,
+                 n_media=int(rng.integers(1, 6)),
+                 text=int(rng.integers(32, 400)), **kw)
+            for i in range(n)]
+
+
+# --------------------------------------------------------------------- #
+# admission policy (pure, no engine)
+# --------------------------------------------------------------------- #
+def test_request_queue_contract():
+    q = RequestQueue()
+    reqs = [_req(i, arrival=float(i)) for i in range(4)]
+    for r in reqs:
+        q.push(r)
+    assert q.depth == 4 and q.n_arrived == 4
+    assert q.oldest_wait_s(10.0) == 10.0
+    q.pop([reqs[1], reqs[3]])               # set semantics, order kept
+    assert [r.item.item_id for r in q.pending] == [0, 2]
+
+
+def test_slo_admission_forces_nearly_due_request(engine):
+    """EDF ordering: a feasible request whose deadline is about to become
+    infeasible must be admitted ahead of older, slack-rich requests."""
+    pricer = PrefillPricer(engine.perf, TPM)
+    adm = SLOAdmission(pricer)
+    adm.note_batch(1.0)                      # quantum = 1s
+    pending = [_req(i, arrival=0.0, slo=500.0) for i in range(8)]
+    tight = _req(99, arrival=0.0, slo=0.0)
+    # feasible but nearly due: slack just above its remaining work
+    tight.slo_s = (pricer.predict(tight, 1024) + pricer.decode_estimate(tight)
+                   + 40.0 + 0.5)
+    pending.append(tight)
+    batch = adm.select(pending, now_s=40.0, max_batch=4)
+    assert len(batch) == 4
+    assert any(r.item.item_id == 99 for r in batch)
+    assert adm.last_n_forced >= 1
+
+
+def test_slo_admission_no_starvation_under_adversarial_stream(engine):
+    """A hopeless request (deadline already infeasible) in a queue that is
+    continuously refilled with fresh, cheap, feasible requests must still
+    be admitted within the starvation horizon — the aging backstop, not
+    the EDF reservation, guarantees it."""
+    pricer = PrefillPricer(engine.perf, TPM)
+    adm = SLOAdmission(pricer, starvation_horizon=6)
+    q = RequestQueue()
+    victim = _req(10_000, arrival=0.0, slo=0.0, n_media=6, text=900,
+                  modality="video")          # hopeless from the start
+    q.push(victim)
+    now, rounds_waited, next_id = 0.0, None, 0
+    for rnd in range(40):
+        for _ in range(8):                   # adversary: endless fresh work
+            q.push(_req(next_id, arrival=now, slo=500.0))
+            next_id += 1
+        batch = adm.select(q.pending, now, max_batch=8)
+        assert batch
+        q.pop(batch)
+        adm.note_batch(1.0)
+        now += 1.0
+        if any(r is victim for r in batch):
+            rounds_waited = rnd
+            break
+    assert rounds_waited is not None, "victim starved"
+    assert rounds_waited <= adm.starvation_horizon + 2
+
+
+def test_slo_admission_degenerates_to_fifo_on_homogeneous_queue(engine):
+    """Identical shapes and loose deadlines: candidate 0 is the FIFO draw
+    and all scores tie, so data-aware admission must pick exactly the
+    FIFO prefix (graceful degeneration)."""
+    pricer = PrefillPricer(engine.perf, TPM)
+    adm = SLOAdmission(pricer)
+    pending = [_req(i, arrival=float(i), slo=1e6, n_media=2, text=100)
+               for i in range(12)]
+    batch = adm.select(pending, now_s=12.0, max_batch=4)
+    assert [r.item.item_id for r in batch] == [0, 1, 2, 3]
+
+
+def test_fifo_admission_is_arrival_prefix(engine):
+    adm = FIFOAdmission()
+    pending = _requests(10)
+    batch = adm.select(pending, 0.0, 4)
+    assert batch == pending[:4]
+
+
+def test_pricer_memo_and_flush(engine):
+    from repro.runtime import OnlineCalibrator
+    cal = OnlineCalibrator()
+    pricer = PrefillPricer(engine.perf, TPM, calibrator=cal)
+    r = _req(0, n_media=3, text=200)
+    p0 = pricer.price(r)
+    base, _, s = pricer.base(r)
+    for _ in range(12):                      # teach the calibrator 1.5×
+        cal.observe("prefill", s, 1, base, base * 1.5)
+    assert pricer.price(r) == p0             # memoized: stale until flush
+    pricer.flush()
+    assert pricer.price(r) > p0 * 1.2        # re-priced under calibration
+    assert pricer.n_flushes == 1
+    # padding overhead is monotone in the padded length
+    assert pricer.pad_extra(r, 4096) >= pricer.pad_extra(r, 1024) >= 0.0
+    # decode cost is strictly positive at any context (monotonicity is a
+    # property of the hardware model's efficiency curve, not guaranteed)
+    assert pricer.decode_tok_s(256) > 0.0 and pricer.decode_tok_s(4096) > 0.0
+
+
+# --------------------------------------------------------------------- #
+# emulated engine: lifecycle, invariants, wiring
+# --------------------------------------------------------------------- #
+_CFG = ServeConfig(n_prefill_workers=2, n_decode_workers=2, decode_slots=4,
+                   max_prefill_batch=4)
+
+
+def test_engine_completes_all_requests_with_sane_timestamps(engine):
+    serve = engine.serving(serve_cfg=_CFG)
+    reqs = _requests(32, seed=1)
+    rep = serve.run(reqs)
+    assert rep.n_completed == 32
+    for r in reqs:
+        assert r.status == "done"
+        assert r.arrival_s <= r.admit_s < r.prefill_done_s
+        assert r.prefill_done_s < r.handoff_done_s      # handoff takes time
+        assert r.handoff_done_s < r.first_token_s <= r.finish_s
+        assert r.tokens_done == r.max_new_tokens
+        assert 0 <= r.decode_worker < _CFG.n_decode_workers
+        # KV handoff priced as bytes/bandwidth + latency
+        np.testing.assert_allclose(r.handoff_done_s - r.prefill_done_s,
+                                   serve._handoff_s(r), rtol=1e-9)
+    assert rep.makespan_s > 0 and rep.throughput_rps > 0
+    assert rep.p99_latency_s >= rep.p50_latency_s > 0
+
+
+def _decode_steps_by_worker(serve):
+    steps = {}
+    for ph, name, cat, ts, dur, tid, args in serve.trace._events:
+        if name == "decode_step":
+            steps.setdefault(tid - 200, []).append((ts / 1e6, dur / 1e6,
+                                                    args))
+    return steps
+
+
+def test_continuous_batching_joins_and_leaves_at_step_boundaries(engine):
+    """Per decode worker: steps never overlap, every request's first token
+    lands exactly at the end of one of its worker's steps, and a request
+    never occupies a step that starts before its handoff completed or
+    after it finished."""
+    serve = engine.serving(serve_cfg=_CFG)
+    reqs = _requests(24, seed=2, max_new=6)
+    serve.run(reqs)
+    steps = _decode_steps_by_worker(serve)
+    assert steps, "no decode steps traced"
+    for w, evs in steps.items():
+        evs.sort()
+        for (t0, d0, _), (t1, _, _) in zip(evs, evs[1:]):
+            assert t1 >= t0 + d0 - 1e-9      # step boundaries: no overlap
+    for r in reqs:
+        evs = steps[r.decode_worker]
+        ends = [t + d for t, d, _ in evs]
+        # first token and finish both coincide with a step boundary
+        assert min(abs(e - r.first_token_s) for e in ends) < 1e-9
+        assert min(abs(e - r.finish_s) for e in ends) < 1e-9
+        # joined no earlier than its handoff: no step containing the
+        # request starts before handoff_done_s
+        starts = [t for t, d, _ in evs
+                  if t + d > r.handoff_done_s + 1e-9 and t < r.finish_s]
+        assert all(t >= r.handoff_done_s - 1e-9 for t in starts)
+
+
+def test_decode_occupancy_never_exceeds_slots(engine):
+    serve = engine.serving(serve_cfg=_CFG)
+    serve.run(_requests(40, seed=3, max_new=16))
+    for evs in _decode_steps_by_worker(serve).values():
+        assert all(a["rows"] <= _CFG.decode_slots for _, _, a in evs)
+
+
+def test_identical_streams_identical_ground_truth_across_policies(engine):
+    """The fig19 A/B contract: both policies see bit-identical arrivals
+    and oracle factors; only scheduling differs."""
+    def stream():
+        rng = np.random.default_rng(7)
+        return [_req(i, arrival=float(i) * 0.02,
+                     n_media=int(rng.integers(1, 8)),
+                     text=int(rng.integers(32, 600)),
+                     factor=float(rng.lognormal(0, 0.2)), slo=20.0)
+                for i in range(48)]
+
+    reps = {}
+    for policy in ("fifo", "slo"):
+        serve = engine.serving(admission=policy, serve_cfg=_CFG)
+        reps[policy] = serve.run(stream())
+    assert reps["fifo"].policy == "fifo" and reps["slo"].policy == "slo"
+    assert reps["fifo"].n_completed == reps["slo"].n_completed == 48
+
+
+def test_engine_run_is_deterministic(engine):
+    rows = []
+    for _ in range(2):
+        serve = engine.serving(serve_cfg=_CFG)
+        rows.append(serve.run(_requests(32, seed=5)).row())
+    assert rows[0] == rows[1]
+
+
+def test_drift_flushes_admission_prices(engine):
+    """A sustained shift in actual/predicted must fire Page–Hinkley and
+    re-estimate (flush) the pricer memo — the serving analogue of the
+    training loop's drift → re-plan."""
+    serve = engine.serving(serve_cfg=_CFG)
+    reqs = _requests(96, seed=6)
+    for r in reqs[32:]:
+        r.true_factor = 1.8                  # post-drift regime
+    serve.run(reqs)
+    assert serve.n_drift_events >= 1
+    assert serve.pricer.n_flushes >= 1
+    names = [e[1] for e in serve.trace._events]
+    assert "serve_drift_reprice" in names
+
+
+def test_metrics_snapshot_has_serve_section(engine):
+    serve = engine.serving(serve_cfg=_CFG)
+    serve.run(_requests(24, seed=8))
+    m = serve.metrics
+    snap = m.snapshot()["serve"]
+    assert m.n_requests == m.n_completed == 24
+    assert m.n_handoffs == 24
+    assert m.n_prefill_batches == snap["n_prefill_batches"] > 0
+    assert snap["n_decode_steps"] > 0
+    assert snap["latency_p99_s"] >= snap["latency_p50_s"] > 0
+    assert 0 < snap["batch_occupancy_mean"] <= 1.0
+    assert snap["n_slo_met"] == m.n_slo_met
+
+
+# --------------------------------------------------------------------- #
+# real-model substrate: KV handoff + continuous batch bit-exactness
+# --------------------------------------------------------------------- #
+TINY = ModelConfig(name="tiny-dense", family="dense", n_layers=2,
+                   d_model=64, n_heads=4, n_kv_heads=2, d_ff=256,
+                   vocab_size=128, dtype="float32")
+MAX_LEN = 32
+
+
+@pytest.fixture(scope="module")
+def tiny_params():
+    return model_lib.init(jax.random.PRNGKey(0), TINY)
+
+
+def _solo_generate(params, prompt_1d, max_new):
+    """Reference: the request never leaves its own B=1 cache."""
+    prompt = prompt_1d[None, :]
+    logits, caches = prefill_into_cache(TINY, params, prompt, MAX_LEN)
+    decode = jax.jit(make_decode_step(TINY))
+    toks, pos = [], prompt.shape[1]
+    tok = jnp.argmax(logits, axis=-1).reshape(1).astype(jnp.int32)
+    for _ in range(max_new):
+        toks.append(int(tok[0]))
+        logits, caches = decode(params, caches, tok, pos)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        pos += 1
+    return toks
+
+
+def test_handoff_decode_matches_single_request(tiny_params):
+    """Two requests prefilled on separate "prefill workers", handed off
+    into one continuous decode batch (different lengths, per-row pos),
+    must generate exactly the tokens each generates alone."""
+    rng = jax.random.PRNGKey(3)
+    pa = jax.random.randint(rng, (5,), 2, TINY.vocab_size)
+    pb = jax.random.randint(jax.random.fold_in(rng, 1), (9,), 2,
+                            TINY.vocab_size)
+    max_new = 6
+    solo = {0: _solo_generate(tiny_params, pa, max_new),
+            1: _solo_generate(tiny_params, pb, max_new)}
+
+    la, ca = prefill_into_cache(TINY, tiny_params, pa[None, :], MAX_LEN)
+    lb, cb = prefill_into_cache(TINY, tiny_params, pb[None, :], MAX_LEN)
+    shared = model_lib.init_cache(TINY, 2, MAX_LEN, jnp.float32)
+    shared = merge_cache_row(shared, ca, row=0)
+    shared = merge_cache_row(shared, cb, row=1)
+    decode = jax.jit(make_decode_step(TINY))
+    tok = jnp.concatenate([jnp.argmax(la, -1).reshape(1),
+                           jnp.argmax(lb, -1).reshape(1)]).astype(jnp.int32)
+    pos = jnp.array([pa.shape[0], pb.shape[0]], jnp.int32)
+    got = {0: [], 1: []}
+    for _ in range(max_new):
+        got[0].append(int(tok[0]))
+        got[1].append(int(tok[1]))
+        logits, shared = decode(tiny_params, shared, tok, pos)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        pos = pos + 1
+    assert got[0] == solo[0]
+    assert got[1] == solo[1]
+
+
+def test_clear_cache_row_isolates_next_occupant(tiny_params):
+    """Continuous batching row recycling: after a request leaves, its row
+    is cleared and a *new* request handed into it mid-flight; the new
+    occupant's tokens must match its solo run (no stale KV leaks), and
+    the surviving row must be unaffected by the join."""
+    rng = jax.random.PRNGKey(4)
+    pa = jax.random.randint(rng, (4,), 2, TINY.vocab_size)
+    pb = jax.random.randint(jax.random.fold_in(rng, 1), (7,), 2,
+                            TINY.vocab_size)
+    pc = jax.random.randint(jax.random.fold_in(rng, 2), (6,), 2,
+                            TINY.vocab_size)
+    solo_b = _solo_generate(tiny_params, pb, 8)
+    solo_c = _solo_generate(tiny_params, pc, 4)
+
+    la, ca = prefill_into_cache(TINY, tiny_params, pa[None, :], MAX_LEN)
+    lb, cb = prefill_into_cache(TINY, tiny_params, pb[None, :], MAX_LEN)
+    shared = model_lib.init_cache(TINY, 2, MAX_LEN, jnp.float32)
+    shared = merge_cache_row(shared, ca, row=0)
+    shared = merge_cache_row(shared, cb, row=1)
+    decode = jax.jit(make_decode_step(TINY))
+    tok = jnp.concatenate([jnp.argmax(la, -1).reshape(1),
+                           jnp.argmax(lb, -1).reshape(1)]).astype(jnp.int32)
+    pos = jnp.array([pa.shape[0], pb.shape[0]], jnp.int32)
+    got_b = []
+    for _ in range(4):                       # A and B decode together
+        got_b.append(int(tok[1]))
+        logits, shared = decode(tiny_params, shared, tok, pos)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        pos = pos + 1
+    # step boundary: A leaves, row 0 cleared, C joins via handoff
+    shared = clear_cache_row(shared, 0)
+    lc, cc = prefill_into_cache(TINY, tiny_params, pc[None, :], MAX_LEN)
+    shared = merge_cache_row(shared, cc, row=0)
+    tok = tok.at[0].set(jnp.argmax(lc, -1).reshape(()).astype(jnp.int32))
+    pos = pos.at[0].set(pc.shape[0])
+    got_c = []
+    for _ in range(4):                       # B continues, C starts fresh
+        got_b.append(int(tok[1]))
+        got_c.append(int(tok[0]))
+        logits, shared = decode(tiny_params, shared, tok, pos)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        pos = pos + 1
+    assert got_b == solo_b                   # B never saw the join/leave
+    assert got_c == solo_c                   # C never saw A's leftovers
+
+
+# --------------------------------------------------------------------- #
+# fig19: smoke (tier-1) + acceptance (slow)
+# --------------------------------------------------------------------- #
+def test_fig19_smoke():
+    from benchmarks.fig19_serving import run_smoke
+    rows = run_smoke()
+    summaries = [r for r in rows if r.get("summary")]
+    assert len(summaries) == 1
+    reports = [r for r in rows if not r.get("summary")]
+    assert {r["policy"] for r in reports} == {"fifo", "slo"}
+    assert all(r["n_completed"] == r["n_requests"] == 48 for r in reports)
+    assert all(r["goodput_rps"] > 0 for r in reports)
+
+
+@pytest.mark.slow
+def test_fig19_serving_acceptance():
+    """Headline: data-aware admission reaches ≥1.2× goodput at
+    lower-or-equal p99 than FIFO at ≥2 of the swept QPS points."""
+    from benchmarks.fig19_serving import run
+    rows = run()
+    summaries = [r for r in rows if r.get("summary")]
+    assert len(summaries) >= 3
+    wins = [r for r in summaries
+            if r["goodput_ratio"] >= 1.2 and r["p99_slo_s"] <= r["p99_fifo_s"]]
+    assert len(wins) >= 2, summaries

@@ -1,0 +1,107 @@
+#!/usr/bin/env python
+"""Persist per-PR benchmark headline numbers as BENCH_*.json snapshots.
+
+The ROADMAP's perf-trajectory item: benchmark claims used to live only in
+commit messages, invisible to the next re-anchor.  This tool runs the
+headline benchmarks and writes their *summary* rows (the acceptance-bearing
+numbers, not the full row dumps) to committed JSON files at the repo root:
+
+  * ``BENCH_train.json``   — fig16 (drift re-plan recovery), fig17
+    (objective sweep), fig18 (lookahead composer);
+  * ``BENCH_serving.json`` — fig19 (data-aware serving goodput/p99).
+
+Run from the repo root (about a minute of wall clock):
+
+    PYTHONPATH=src python tools/bench_snapshot.py            # all
+    PYTHONPATH=src python tools/bench_snapshot.py --only serving
+
+Snapshots are deterministic (fixed seeds, virtual-time emulations) up to
+wall-clock-dependent fields, which are excluded from the summary rows the
+benchmarks emit; re-running on an unchanged tree should reproduce the
+committed numbers.  Compare against the previous snapshot in git before
+overwriting expectations.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+# snapshot -> {figure: (module, run kwargs)}; kwargs shrink the slowest
+# sweeps to snapshot scale while keeping the acceptance-bearing regimes
+SNAPSHOTS = {
+    "BENCH_train.json": {
+        "fig16": ("benchmarks.fig16_replan", {"step_wall_s": 0.05}),
+        "fig17": ("benchmarks.fig17_objective",
+                  {"gbs_sweep": (32, 128, 512), "n_trials": 8,
+                   "n_eval": 8}),
+        "fig18": ("benchmarks.fig18_composer", {"n_batches": 48}),
+    },
+    "BENCH_serving.json": {
+        "fig19": ("benchmarks.fig19_serving", {}),
+    },
+}
+
+
+def _is_summary(row: dict) -> bool:
+    return bool(row.get("summary")) or row.get("phase") == "summary" \
+        or row.get("objective") == "summary"
+
+
+def _git_head() -> str:
+    try:
+        return subprocess.run(["git", "rev-parse", "--short", "HEAD"],
+                              cwd=REPO, capture_output=True, text=True,
+                              check=True).stdout.strip()
+    except Exception:
+        return "unknown"
+
+
+def snapshot(name: str, figures: dict) -> dict:
+    import importlib
+    out = {"git": _git_head(), "figures": {}}
+    for fig, (module, kwargs) in figures.items():
+        mod = importlib.import_module(module)
+        t0 = time.time()
+        rows = mod.run(**kwargs)
+        headline = [r for r in rows if _is_summary(r)]
+        assert headline, f"{fig}: no summary rows to snapshot"
+        out["figures"][fig] = {
+            "module": module,
+            "args": {k: list(v) if isinstance(v, tuple) else v
+                     for k, v in kwargs.items()},
+            "wall_s": round(time.time() - t0, 2),
+            "headline": headline,
+        }
+        print(f"{name}: {fig} -> {len(headline)} summary row(s) "
+              f"({out['figures'][fig]['wall_s']}s)")
+    return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help="comma list: train,serving (default: all)")
+    args = ap.parse_args()
+    only = {s.strip() for s in args.only.split(",") if s.strip()}
+    sys.path.insert(0, str(REPO / "src"))
+    sys.path.insert(0, str(REPO))
+    for name, figures in SNAPSHOTS.items():
+        key = name.removeprefix("BENCH_").removesuffix(".json")
+        if only and key not in only:
+            continue
+        data = snapshot(name, figures)
+        path = REPO / name
+        path.write_text(json.dumps(data, indent=2, sort_keys=True) + "\n",
+                        encoding="utf-8")
+        print(f"wrote {path.relative_to(REPO)}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -37,6 +37,7 @@ REQUIRED = [
     "docs/objectives.md",
     "docs/resharding.md",
     "docs/data.md",
+    "docs/serving.md",
     "benchmarks/README.md",
 ]
 
@@ -47,6 +48,9 @@ DOCTEST_MODULES = [
     "repro.core.optimizer.makespan",
     "repro.launch.reshard",
     "repro.data.composer",
+    "repro.serve.request",
+    "repro.serve.admission",
+    "repro.serve.engine",
 ]
 
 # [text](target) — excluding images; target split from an optional title
