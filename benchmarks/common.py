@@ -78,7 +78,8 @@ def simulate_iteration(plan: ParallelismPlan,
                        sched: OnlineMicrobatchScheduler,
                        items, *, random_assign: bool, seed: int = 0,
                        mode: str = "train") -> IterStats:
-    """Play one scheduled global batch through the 1F1B simulator.
+    """Play one scheduled global batch through the pipeline simulator
+    (the plan's own schedule family — 1F1B, interleaved, or encoder_fill).
 
     Bucket durations come from `ScheduleOutput.e_dur/l_dur` (already
     per-stage: the scheduler divides by the module's PP degree); the
@@ -99,7 +100,8 @@ def simulate_iteration(plan: ParallelismPlan,
     ranks = simulate_bucket_ranks_batch(e_b, l_b, n_mb=n_mb, dp=dp,
                                         e_pp=e_pp, l_pp=plan.llm.pp,
                                         bwd_over_fwd=BWD_OVER_FWD,
-                                        backward=(mode == "train"))
+                                        backward=(mode == "train"),
+                                        schedule=plan.schedule)
     step_time = float(ranks.makespan.max())
     idle = float(ranks.total_idle.sum())
     busy = float(ranks.stage_busy.sum())
@@ -114,11 +116,17 @@ def simulate_iteration(plan: ParallelismPlan,
                for it in items)
     # per-CHIP stage FLOPs (Fig. 14 compares chip utilization across stages)
     stage_fl = []
-    if plan.encoder:
-        chips = max(plan.encoder.chips / e_pp, 1)
-        stage_fl += [e_fl / e_pp / chips] * e_pp
-    chips = max(plan.llm.chips / plan.llm.pp, 1)
-    stage_fl += [l_fl / plan.llm.pp / chips] * plan.llm.pp
+    if plan.schedule == "encoder_fill":
+        # encoder replicated on the LLM ranks: l_pp stages, each retiring
+        # its share of both modules' work on the LLM's own chips.
+        chips = max(plan.llm.chips / plan.llm.pp, 1)
+        stage_fl = [(e_fl + l_fl) / plan.llm.pp / chips] * plan.llm.pp
+    else:
+        if plan.encoder:
+            chips = max(plan.encoder.chips / e_pp, 1)
+            stage_fl += [e_fl / e_pp / chips] * e_pp
+        chips = max(plan.llm.chips / plan.llm.pp, 1)
+        stage_fl += [l_fl / plan.llm.pp / chips] * plan.llm.pp
     return IterStats(step_time, idle, busy, stage_busy_acc / dp,
                      np.asarray(stage_fl), tokens)
 

@@ -37,6 +37,7 @@ import numpy as np
 
 from benchmarks.common import DEFAULT_CLUSTER, engine_for
 from benchmarks.fig18_composer import bursty_stream
+from repro.runtime.metrics import nan_to_none
 from repro.serve import PrefillPricer, Request, ServeConfig
 
 QPS_POINTS = (3.0, 4.0, 5.0)
@@ -94,10 +95,14 @@ def run(arch: str = "llava-ov-llama8b", qps_points: Sequence[float] = QPS_POINTS
             reports[policy] = rep
             rows.append({"figure": "fig19", "qps": qps, **rep.row()})
         f, s = reports["fifo"], reports["slo"]
+        # ServeReport.row() already maps missing stats (no completions) to
+        # None — do the same here so the summary row stays valid JSON and
+        # an overloaded point renders as "no p99", never a perfect 0 ms.
         rows.append({
             "figure": "fig19", "qps": qps, "summary": True,
             "goodput_ratio": s.goodput_rps / max(f.goodput_rps, 1e-12),
-            "p99_fifo_s": f.p99_latency_s, "p99_slo_s": s.p99_latency_s,
+            "p99_fifo_s": nan_to_none(f.p99_latency_s),
+            "p99_slo_s": nan_to_none(s.p99_latency_s),
             "slo_met_fifo": f.n_slo_met, "slo_met_slo": s.n_slo_met,
         })
     return rows

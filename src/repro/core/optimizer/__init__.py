@@ -1,4 +1,6 @@
 from repro.core.optimizer.space import (
+    SCHEDULES,
+    VIRTUAL_CHUNKS,
     ClusterSpec,
     ModuleParallelism,
     ParallelismPlan,
@@ -17,6 +19,8 @@ from repro.core.optimizer.objective import (
 from repro.core.optimizer.search import ParallelismOptimizer, SearchResult
 
 __all__ = [
+    "SCHEDULES",
+    "VIRTUAL_CHUNKS",
     "ClusterSpec",
     "ModuleParallelism",
     "ParallelismPlan",

@@ -34,6 +34,33 @@ def pipeline_makespan(n_mb: int, e_pp: int, l_pp: int, e_dur, l_dur):
     return (n_mb + e_pp + l_pp - 1) * np.maximum(e_dur, l_dur)
 
 
+def schedule_makespan(plan: ParallelismPlan, e_dur, l_dur):
+    """Closed-form step estimate (N_mb + bubble_slots) · slot cost for any
+    schedule family, elementwise over arrays (see ``docs/schedules.md``).
+
+    ``e_dur`` follows each family's own per-stage convention: already
+    divided by E_pp for the staged families; the *full* per-microbatch
+    encoder duration under ``encoder_fill`` (its colocated E_pp is 1),
+    which this function splits over the L_pp replicas.  The chunk then
+    runs *serial* with the rank's LLM work, so the encoder_fill slot costs
+    the sum — a (deliberately conservative: real bubble-filling overlaps
+    part of it) upper estimate the sampling objectives' ``"simulate"``
+    mode refines.  For ``schedule="1f1b"`` this is exactly
+    `pipeline_makespan`.
+
+    >>> lp = ModuleParallelism(1, 2, 1)
+    >>> ep = ModuleParallelism(1, 1, 1)
+    >>> float(schedule_makespan(ParallelismPlan(llm=lp, encoder=ep, n_mb=4,
+    ...                                         schedule="encoder_fill"),
+    ...                         1.0, 3.0))                # (4+1)·(3 + 1/2)
+    17.5
+    """
+    if plan.schedule == "encoder_fill":
+        return (plan.n_mb + plan.bubble_slots) \
+            * (np.asarray(e_dur) / plan.llm.pp + l_dur)
+    return (plan.n_mb + plan.bubble_slots) * np.maximum(e_dur, l_dur)
+
+
 def accepts_fallback(fn) -> bool:
     """True if a corrector function takes a `fallback_shape` keyword —
     checked via signature, never by a trial call (a probe call would
@@ -96,8 +123,7 @@ def mean_makespan(perf: PerfModel, plan: ParallelismPlan,
                                    e_dur, fallback_shape=mean_bsz)
         l_dur = correct_scalar(corrector, "llm", t_seq, lp.tp, l_dur,
                                fallback_shape=mean_seq)
-    e_pp = ep.pp if ep else 0
-    return pipeline_makespan(i, e_pp, lp.pp, e_dur, l_dur)
+    return float(schedule_makespan(plan, e_dur, l_dur))
 
 
 def expected_makespan(perf: PerfModel, plan: ParallelismPlan,

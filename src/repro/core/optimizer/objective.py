@@ -45,7 +45,8 @@ from repro.core.optimizer.makespan import (
     accepts_fallback,
     correct_scalar,
     mean_makespan,
-    pipeline_makespan,
+    pipeline_makespan,  # noqa: F401  (re-exported for the property harness)
+    schedule_makespan,
 )
 from repro.core.optimizer.space import ParallelismPlan
 from repro.core.profiling.data_profiler import ShapeDistribution
@@ -257,13 +258,19 @@ class _SamplingObjective(Objective):
         score = score or self.score
         e_pp = plan.encoder.pp if plan.encoder else 0
         if score == "pipeline":
+            # bottleneck bucket priced by the plan's schedule family: the
+            # staged families pay max(E, L) per slot, encoder_fill pays the
+            # serial chunk+LLM sum (schedule_makespan does the /L_pp split)
+            if plan.schedule == "encoder_fill":
+                c = (l_b + e_b / plan.llm.pp).max(axis=-1)
+                return (plan.n_mb + plan.bubble_slots) * c
             c = np.maximum(e_b, l_b).max(axis=-1)
-            return pipeline_makespan(plan.n_mb, e_pp, plan.llm.pp, c, c)
+            return schedule_makespan(plan, c, c)
         from repro.core.pipeline.simulator import simulate_bucket_ranks_batch
         batch = simulate_bucket_ranks_batch(
             e_b, l_b, n_mb=plan.n_mb, dp=plan.llm.dp, e_pp=e_pp,
             l_pp=plan.llm.pp, bwd_over_fwd=self.bwd_over_fwd,
-            backward=(mode == "train"))
+            backward=(mode == "train"), schedule=plan.schedule)
         return batch.makespan.max(axis=-1)       # slowest dp rank per trial
 
     def trial_makespan(self, plan: ParallelismPlan, groups,

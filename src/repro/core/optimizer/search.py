@@ -1,9 +1,12 @@
 """Data-aware 3D Parallelism Optimizer (paper §3.3, Algorithm 1).
 
-Finds θ* = (E_tp, E_pp, E_dp, L_tp, L_pp, L_dp, N_mb) minimizing the
-expected makespan subject to chip-count (Eq. 3) and memory (Eq. 4/5)
+Finds θ* = (E_tp, E_pp, E_dp, L_tp, L_pp, L_dp, N_mb, schedule) minimizing
+the expected makespan subject to chip-count (Eq. 3) and memory (Eq. 4/5)
 constraints, using the Profiling Engine's throughput/memory models and the
-Data Profiler's shape statistics.
+Data Profiler's shape statistics.  The schedule family (1F1B, interleaved
+virtual stages, encoder-in-bubble — see ``docs/schedules.md``) is searched
+*jointly* with the partition: each family reuses the same duration/memory
+tables and only changes the closed-form step estimate.
 
 Implementation note: Algorithm 1's inner loop evaluates shapes of the form
     t_seq = mean_seq · GBS / (i · L_dp)
@@ -26,7 +29,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -38,6 +41,8 @@ from repro.core.optimizer.objective import (
     get_objective,
 )
 from repro.core.optimizer.space import (
+    SCHEDULES,
+    VIRTUAL_CHUNKS,
     ClusterSpec,
     ModuleParallelism,
     ParallelismPlan,
@@ -124,7 +129,8 @@ class ParallelismOptimizer:
                  quantile: Optional[float] = None, seed: int = 0,
                  calibrator: Optional[DurationCorrector] = None,
                  partition_step: int = 0, keep_history: bool = False,
-                 refine_expected_top_k: int = 32):
+                 refine_expected_top_k: int = 32,
+                 schedules: Sequence[str] = SCHEDULES):
         """objective: 'mean' (Algorithm 1), 'expected-random' (Eq. 1 via
         Monte-Carlo over random round-robin assignment), 'balanced-quantile'
         (LPT-balanced assignment scored at `quantile`), or any
@@ -137,7 +143,10 @@ class ParallelismOptimizer:
         seed: base seed for the Monte-Carlo draws — equal seeds reproduce
         the search exactly, distinct seeds resample the trial batches.
         calibrator: optional `DurationCorrector` refining every duration
-        the search evaluates (tables and Monte-Carlo alike)."""
+        the search evaluates (tables and Monte-Carlo alike).
+        schedules: schedule families to enumerate (default: all of
+        `space.SCHEDULES`); pass ("1f1b",) to reproduce the fixed-schedule
+        search the paper's Algorithm 1 describes."""
         self.cluster = cluster
         self.perf = perf
         self.mode = mode
@@ -147,6 +156,7 @@ class ParallelismOptimizer:
         self.n_trials = getattr(self.objective_obj, "n_trials", n_trials)
         self.seed = seed
         self.calibrator = calibrator
+        self.schedules = tuple(schedules)
         self.keep_history = keep_history
         self.refine_top_k = refine_expected_top_k
         self.max_pp = max_pp if max_pp is not None else \
@@ -193,29 +203,51 @@ class ParallelismOptimizer:
         return tab.dur[mp.tp][k], tab.act[(mp.tp, mp.pp)][k]
 
     def _eval_config(self, ep: Optional[ModuleParallelism],
-                     lp: ModuleParallelism, gbs: int,
+                     lp: ModuleParallelism, sched: str, gbs: int,
                      l_tab: _ModuleTables, e_tab: Optional[_ModuleTables]):
-        """Mean-shape makespan + feasibility for every N_mb of one config.
-        Returns (i, T, feas) arrays, or None when no N_mb fits in memory
-        (short-circuits before the makespan math — the search hot path)."""
+        """Mean-shape makespan + feasibility for every N_mb of one
+        (config, schedule-family) pair.  Returns (i, T, feas) arrays with
+        infeasible or family-invalid N_mb (interleaved divisibility) scored
+        inf, or None when no N_mb fits in memory (short-circuits before the
+        makespan math — the search hot path).  Candidate validity is
+        `np.isfinite(T)`, which is `feas` *and* the family constraint."""
         mem_cap = self.cluster.mem_bytes
         n_max = max(1, gbs // lp.dp)
         l_dur, l_act = self._k_index(l_tab, lp, gbs, n_max)
-        feas = l_tab.model_state[(lp.tp, lp.pp)] + lp.pp * l_act <= mem_cap
+        l_mem = l_tab.model_state[(lp.tp, lp.pp)] + lp.pp * l_act
+        i = np.arange(1, n_max + 1)
+        if sched == "encoder_fill":
+            # the replicated encoder shares the LLM's chips, so the memory
+            # budgets add; its act window matches the LLM's in-flight depth.
+            e_dur, e_act = self._k_index(e_tab, ep, gbs, n_max)
+            feas = (l_mem + e_tab.model_state[(ep.tp, 1)]
+                    + lp.pp * e_act <= mem_cap)
+            if not feas.any():
+                return None
+            # per-slot cost is *serial* LLM stage + encoder chunk (the
+            # conservative closed form — `schedule_makespan` convention).
+            T = (i + lp.pp - 1) * (l_dur + e_dur) / lp.pp
+            T[~feas] = np.inf
+            return i, T, feas
+        feas = l_mem <= mem_cap
         if ep is not None:
             e_dur, e_act = self._k_index(e_tab, ep, gbs, n_max)
             feas &= (e_tab.model_state[(ep.tp, ep.pp)]
                      + (ep.pp + lp.pp) * e_act <= mem_cap)
         if not feas.any():
             return None
-        i = np.arange(1, n_max + 1)
         if ep is not None:
             dur = np.maximum(e_dur / ep.pp, l_dur / lp.pp)
             e_pp = ep.pp
         else:
             dur = l_dur / lp.pp
             e_pp = 0
-        T = (i + e_pp + lp.pp - 1) * dur
+        depth = e_pp + lp.pp
+        if sched == "interleaved":
+            T = (i + (depth - 1) / VIRTUAL_CHUNKS) * dur
+            T[i % depth != 0] = np.inf       # family divisibility constraint
+        else:
+            T = (i + depth - 1) * dur
         T[~feas] = np.inf
         return i, T, feas
 
@@ -230,30 +262,40 @@ class ParallelismOptimizer:
         n_configs = n_feasible = 0
         history = []
         rerank = self.objective != "mean" and len(dist) > 0
-        top: list = []       # (T_mean, ep, lp) candidates for the re-rank
+        top: list = []       # (T_mean, ep, lp, sched) candidates to re-rank
 
-        for ep, lp in enumerate_configs(cluster, has_encoder=has_encoder,
-                                        max_pp=self.max_pp,
-                                        partition_step=self.partition_step):
+        for ep, lp, sched in enumerate_configs(
+                cluster, has_encoder=has_encoder, max_pp=self.max_pp,
+                partition_step=self.partition_step,
+                schedules=self.schedules):
             if lp.pp > perf.llm.cfg.n_layers:
                 continue
             if ep is not None and ep.pp > perf.encoder.cfg.n_layers:
                 continue
+            if sched == "interleaved" and (
+                    lp.pp * VIRTUAL_CHUNKS > perf.llm.cfg.n_layers
+                    or (ep is not None
+                        and ep.pp * VIRTUAL_CHUNKS > perf.encoder.cfg.n_layers)):
+                continue      # each rank hosts v chunks: needs pp·v layers
             n_configs += 1
-            evald = self._eval_config(ep, lp, gbs, l_tab, e_tab)
+            evald = self._eval_config(ep, lp, sched, gbs, l_tab, e_tab)
             if evald is None:
                 continue
             i, T, feas = evald
             n_feasible += int(feas.sum())
             j = int(np.argmin(T))
+            if not np.isfinite(T[j]):
+                continue      # feasible N_mb exist but none family-valid
             if self.keep_history:
-                plan_j = ParallelismPlan(llm=lp, encoder=ep, n_mb=int(i[j]))
+                plan_j = ParallelismPlan(llm=lp, encoder=ep, n_mb=int(i[j]),
+                                         schedule=sched)
                 history.append((plan_j.as_tuple(), float(T[j])))
             if T[j] < best_T:
                 best_T = float(T[j])
-                best = ParallelismPlan(llm=lp, encoder=ep, n_mb=int(i[j]))
+                best = ParallelismPlan(llm=lp, encoder=ep, n_mb=int(i[j]),
+                                       schedule=sched)
             if rerank:
-                top.append((float(T[j]), ep, lp))
+                top.append((float(T[j]), ep, lp, sched))
 
         if rerank and top:
             best, best_T = self._rerank(top, dist, gbs, l_tab, e_tab,
@@ -272,21 +314,25 @@ class ParallelismOptimizer:
         distributions, so the objective must be free to choose fewer."""
         top.sort(key=lambda t: t[0])
         plans = []
-        for _, ep, lp in top[: self.refine_top_k]:
-            evald = self._eval_config(ep, lp, gbs, l_tab, e_tab)
+        for _, ep, lp, sched in top[: self.refine_top_k]:
+            evald = self._eval_config(ep, lp, sched, gbs, l_tab, e_tab)
             if evald is None:
                 continue
-            i, _T, feas = evald
+            i, _T, _feas = evald
+            ok = np.isfinite(_T)      # feasible AND family-valid N_mb
+            if not ok.any():
+                continue
             cands = {int(i[int(np.argmin(_T))])}
-            cands.update(v for v in _pow2s_up_to(int(i[-1])) if feas[v - 1])
-            plans.extend(ParallelismPlan(llm=lp, encoder=ep, n_mb=n_mb)
-                         for n_mb in sorted(cands) if feas[n_mb - 1])
+            cands.update(v for v in _pow2s_up_to(int(i[-1])) if ok[v - 1])
+            plans.extend(ParallelismPlan(llm=lp, encoder=ep, n_mb=n_mb,
+                                         schedule=sched)
+                         for n_mb in sorted(cands) if ok[n_mb - 1])
         if not plans:
             return fallback
         # the cache carries per-(tp, pp) item durations AND the sampled
         # trial indices, both plan-independent, across every candidate —
         # each plan evaluation is then one batched partition + one
-        # `simulate_1f1b_batch` wavefront over all (trial, rank) instances.
+        # schedule-family wavefront over all (trial, rank) instances.
         obj = self.objective_obj
         best, best_T = None, float("inf")
         dur_cache: Dict = {}

@@ -43,11 +43,30 @@ class ScheduleOutput:
 
     @property
     def step_makespan(self) -> float:
-        """Pipeline-makespan estimate (N_mb + depth − 1) · cmax — comparable
-        across plans with different bucket counts, unlike raw cmax."""
+        """Pipeline-makespan estimate (N_mb + bubble_slots) · cmax —
+        comparable across plans with different bucket counts *and* schedule
+        families, unlike raw cmax.  cmax is the solver's bucket bottleneck
+        over `_solver_durations`, i.e. already the per-slot cost of the
+        plan's own family (combined serial cost under encoder_fill)."""
         if self.plan is None:
             return self.cmax
-        return (self.plan.n_mb + self.plan.pipeline_depth - 1) * self.cmax
+        return (self.plan.n_mb + self.plan.bubble_slots) * self.cmax
+
+
+def _solver_durations(plan: Optional[ParallelismPlan], e_dur: np.ndarray,
+                      l_dur: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Per-item durations the balancing solver should weigh.
+
+    For the staged families a bucket costs max(ΣE, ΣL) — encoder and LLM
+    stages run on *different* ranks, so the solver balances the two module
+    loads independently.  Under ``encoder_fill`` the encoder chunk (its full
+    duration split over the L_pp replicas) runs *serially* with the LLM
+    stage on the same ranks, so the bucket cost is the combined sum — pass
+    it as both module loads and max(Σc, Σc) degenerates to Σc."""
+    if plan is not None and plan.schedule == "encoder_fill":
+        comb = l_dur + e_dur / plan.llm.pp
+        return comb, comb
+    return e_dur, l_dur
 
 
 class OnlineMicrobatchScheduler:
@@ -103,7 +122,8 @@ class OnlineMicrobatchScheduler:
         plan = self.plan                 # capture once: hot-swap safe
         e_dur, l_dur = self.item_durations(items, plan)
         m = plan.n_buckets
-        res = solve_makespan_bnb(e_dur, l_dur, m,
+        se, sl = _solver_durations(plan, e_dur, l_dur)
+        res = solve_makespan_bnb(se, sl, m,
                                  time_limit_s=self.ilp_time_limit_s)
         if res.timed_out:
             # hybrid contract: on timeout the incumbent is the LPT solution
@@ -111,7 +131,7 @@ class OnlineMicrobatchScheduler:
             solver = "ilp-timeout"
         else:
             solver = "ilp"
-        lb = lower_bound(e_dur, l_dur, m)
+        lb = lower_bound(se, sl, m)
         return ScheduleOutput(res.groups, res.cmax, lb, solver,
                               time.monotonic() - t0, e_dur, l_dur, plan)
 
@@ -128,8 +148,9 @@ class OnlineMicrobatchScheduler:
         groups: List[List[int]] = [[] for _ in range(m)]
         for pos, i in enumerate(perm):
             groups[pos % m].append(int(i))
-        return ScheduleOutput(groups, cmax(e_dur, l_dur, groups),
-                              lower_bound(e_dur, l_dur, m), "random",
+        se, sl = _solver_durations(plan, e_dur, l_dur)
+        return ScheduleOutput(groups, cmax(se, sl, groups),
+                              lower_bound(se, sl, m), "random",
                               time.monotonic() - t0, e_dur, l_dur, plan)
 
     # ------------------------------------------------------------------ #

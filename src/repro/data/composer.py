@@ -113,10 +113,20 @@ def edf_forced_count(slack: Sequence[int], per_step: int) -> int:
     2
     >>> edf_forced_count([1, 1, 5, 5], per_step=2)   # next step fits both
     0
+    >>> edf_forced_count([0, 10**9], per_step=1)     # huge slack: O(n) mem
+    1
     """
     slack = np.maximum(np.asarray(slack, dtype=np.int64), 0)
-    if len(slack) == 0:
+    n = len(slack)
+    if n == 0:
         return 0
+    # `np.bincount` allocates O(max slack) — one relaxed deadline (slack
+    # ~1e9) would allocate gigabytes.  Beyond the forcing horizon
+    # H = ceil(n/per_step) slack can never force: for j >= H,
+    # n_j − j·per_step <= n − n <= 0, so clipping to H changes no j < H
+    # term and adds only non-positive ones — the count is exact.
+    horizon = -(-n // max(int(per_step), 1))
+    slack = np.minimum(slack, horizon)
     n_j = np.cumsum(np.bincount(slack))
     return int(max(0, (n_j - np.arange(len(n_j)) * per_step).max()))
 
@@ -272,8 +282,8 @@ class LookaheadComposer:
                           e: np.ndarray, l: np.ndarray,
                           media: np.ndarray
                           ) -> Tuple[np.ndarray, np.ndarray, List[tuple]]:
-        """(makespan, score, shape_key) per candidate — one LPT + one 1F1B
-        wavefront over the whole candidate set."""
+        """(makespan, score, shape_key) per candidate — one LPT + one
+        schedule wavefront (the plan's own family) over the candidate set."""
         plan = self.scheduler.plan
         idx = np.asarray(cands, dtype=np.int64)
         e_s, l_s = e[idx], l[idx]                      # (C, n)
@@ -283,7 +293,8 @@ class LookaheadComposer:
         tr = simulate_bucket_ranks_batch(
             e_b, l_b, n_mb=plan.n_mb, dp=plan.llm.dp, e_pp=e_pp,
             l_pp=plan.llm.pp, bwd_over_fwd=self.bwd_over_fwd,
-            backward=(getattr(self.scheduler, "mode", "train") == "train"))
+            backward=(getattr(self.scheduler, "mode", "train") == "train"),
+            schedule=plan.schedule)
         makespan = tr.makespan.max(axis=-1)            # slowest dp rank
         if self.score == "makespan":
             scores = makespan.copy()

@@ -152,6 +152,10 @@ def reshard_params(params, old_plan: ParallelismPlan,
     Stage-stacked pipeline params (leaves ``(old_pp, L/old_pp, ...)``) are
     re-partitioned to ``(new_pp, L/new_pp, ...)`` and sharded over the new
     mesh's "stage" axis; generic pytrees are replicated onto the new mesh.
+    A *schedule-only* transition (same LLM parallelism, different schedule
+    family in the widened θ tuple) implies an identical mesh: the
+    re-layout degenerates to a no-op placement (``bytes_moved == 0``)
+    while the report still records the full old/new plan identities.
     Donation hands the old buffers to the transfer so peak memory stays at
     one copy (double-residency during a swap is exactly the failure mode a
     memory-feasible plan can't afford).

@@ -19,7 +19,13 @@ import numpy as np
 
 
 class RollingStat:
-    """Bounded-window scalar stream with O(1) append."""
+    """Bounded-window scalar stream with O(1) append.
+
+    An *empty* window has no statistics: ``mean/max/quantile`` return NaN,
+    never a fake 0.0 — a fully-overloaded serve run that completed nothing
+    must report p99 latency as *missing*, not as a perfect 0 ms.  Renderers
+    map NaN to absent (`nan_to_none`); ``last()`` likewise returns NaN so
+    display paths can tell "no data yet" from a measured zero."""
 
     __slots__ = ("_buf", "count")
 
@@ -32,21 +38,28 @@ class RollingStat:
         self.count += 1
 
     def mean(self) -> float:
-        return float(np.mean(self._buf)) if self._buf else 0.0
+        return float(np.mean(self._buf)) if self._buf else float("nan")
 
     def max(self) -> float:
-        return float(np.max(self._buf)) if self._buf else 0.0
+        return float(np.max(self._buf)) if self._buf else float("nan")
 
     def last(self) -> float:
-        return self._buf[-1] if self._buf else 0.0
+        return self._buf[-1] if self._buf else float("nan")
 
     def quantile(self, q: float) -> float:
         """Windowed quantile (serving p50/p99 tails).  O(window log window)
         — called at snapshot/report time, never on the hot path."""
-        return float(np.quantile(self._buf, q)) if self._buf else 0.0
+        return float(np.quantile(self._buf, q)) if self._buf else float("nan")
 
     def __len__(self) -> int:
         return len(self._buf)
+
+
+def nan_to_none(x: float):
+    """NaN → None, so JSON-bound snapshots stay valid JSON (`json.dumps`
+    would emit the non-standard literal ``NaN``) and missing stats render
+    as absent rather than numeric."""
+    return None if isinstance(x, float) and np.isnan(x) else x
 
 
 class RuntimeMetrics:
@@ -167,6 +180,9 @@ class RuntimeMetrics:
 
     # ------------------------------------------------------------------ #
     def snapshot(self) -> dict:
+        """JSON-safe counter snapshot.  Stats whose window is empty appear
+        as None ("no data"), never as a fake 0.0."""
+        _n = nan_to_none
         return {
             "n_schedules": self.n_schedules,
             "n_steps": self.n_steps,
@@ -176,19 +192,19 @@ class RuntimeMetrics:
             "n_composed": self.n_composed,
             "n_forced_items": self.n_forced_items,
             "n_truncated_tokens": self.n_truncated_tokens,
-            "compose_elapsed_mean_s": self.compose_elapsed_s.mean(),
-            "compose_pred_gain_mean": self.compose_pred_gain.mean(),
-            "truncated_tokens_mean": self.truncated_tokens.mean(),
-            "reshard_mean_s": self.reshard_s.mean(),
-            "imbalance_mean": self.imbalance.mean(),
-            "imbalance_last": self.imbalance.last(),
-            "sched_elapsed_mean_s": self.sched_elapsed_s.mean(),
-            "pred_cmax_mean_s": self.pred_cmax_s.mean(),
-            "bubble_fraction_mean": self.bubble_fraction.mean(),
-            "step_time_mean_s": self.step_time_s.mean(),
-            "stage_utilization": {p: s.mean()
+            "compose_elapsed_mean_s": _n(self.compose_elapsed_s.mean()),
+            "compose_pred_gain_mean": _n(self.compose_pred_gain.mean()),
+            "truncated_tokens_mean": _n(self.truncated_tokens.mean()),
+            "reshard_mean_s": _n(self.reshard_s.mean()),
+            "imbalance_mean": _n(self.imbalance.mean()),
+            "imbalance_last": _n(self.imbalance.last()),
+            "sched_elapsed_mean_s": _n(self.sched_elapsed_s.mean()),
+            "pred_cmax_mean_s": _n(self.pred_cmax_s.mean()),
+            "bubble_fraction_mean": _n(self.bubble_fraction.mean()),
+            "step_time_mean_s": _n(self.step_time_s.mean()),
+            "stage_utilization": {p: _n(s.mean())
                                   for p, s in sorted(self.stage_util.items())},
-            "pred_error": {m: s.mean()
+            "pred_error": {m: _n(s.mean())
                            for m, s in sorted(self.pred_error.items())},
             "serve": {
                 "n_requests": self.n_requests,
@@ -199,12 +215,12 @@ class RuntimeMetrics:
                 "n_completed": self.n_completed,
                 "n_slo_met": self.n_slo_met,
                 "n_serve_compiles": self.n_serve_compiles,
-                "queue_depth_mean": self.queue_depth.mean(),
-                "batch_occupancy_mean": self.batch_occupancy.mean(),
-                "prefill_batch_mean_s": self.prefill_batch_s.mean(),
-                "decode_step_mean_s": self.decode_step_s.mean(),
-                "latency_p50_s": self.latency_s.quantile(0.50),
-                "latency_p99_s": self.latency_s.quantile(0.99),
-                "ttft_p50_s": self.ttft_s.quantile(0.50),
+                "queue_depth_mean": _n(self.queue_depth.mean()),
+                "batch_occupancy_mean": _n(self.batch_occupancy.mean()),
+                "prefill_batch_mean_s": _n(self.prefill_batch_s.mean()),
+                "decode_step_mean_s": _n(self.decode_step_s.mean()),
+                "latency_p50_s": _n(self.latency_s.quantile(0.50)),
+                "latency_p99_s": _n(self.latency_s.quantile(0.99)),
+                "ttft_p50_s": _n(self.ttft_s.quantile(0.50)),
             },
         }

@@ -88,7 +88,10 @@ class ServeReport:
     n_compiles: int
 
     def row(self) -> dict:
-        return dict(self.__dict__)
+        """JSON-safe dict: missing stats (NaN — e.g. p99 latency with zero
+        completions) become None/absent, never a fake 0.0."""
+        from repro.runtime.metrics import nan_to_none
+        return {k: nan_to_none(v) for k, v in self.__dict__.items()}
 
 
 class _DecodeWorker:
@@ -316,7 +319,11 @@ class ServeEngine:
     # ------------------------------------------------------------------ #
     def _report(self, requests: Sequence[Request]) -> ServeReport:
         done = self._completed
-        lat = np.array([r.latency_s for r in done]) if done else np.zeros(1)
+        # no completions → latency stats are *missing* (NaN), not 0.0: a
+        # fully-overloaded run must not report a perfect p99 (row() maps
+        # NaN to None so JSON consumers see them as absent).
+        nan = float("nan")
+        lat = np.array([r.latency_s for r in done]) if done else None
         ttft = np.array([r.ttft_s for r in done if r.ttft_s >= 0])
         makespan = max((r.finish_s for r in done), default=0.0)
         n_slo = sum(r.slo_met for r in done)
@@ -329,11 +336,11 @@ class ServeEngine:
             makespan_s=makespan,
             goodput_rps=n_slo / max(makespan, 1e-12),
             throughput_rps=len(done) / max(makespan, 1e-12),
-            p50_latency_s=float(np.quantile(lat, 0.5)),
-            p99_latency_s=float(np.quantile(lat, 0.99)),
-            mean_ttft_s=float(ttft.mean()) if len(ttft) else 0.0,
-            mean_queue_depth=m.queue_depth.mean() if m else 0.0,
-            mean_occupancy=m.batch_occupancy.mean() if m else 0.0,
+            p50_latency_s=float(np.quantile(lat, 0.5)) if lat is not None else nan,
+            p99_latency_s=float(np.quantile(lat, 0.99)) if lat is not None else nan,
+            mean_ttft_s=float(ttft.mean()) if len(ttft) else nan,
+            mean_queue_depth=m.queue_depth.mean() if m else nan,
+            mean_occupancy=m.batch_occupancy.mean() if m else nan,
             n_prefill_batches=m.n_prefill_batches if m else 0,
             n_decode_steps=m.n_decode_steps if m else 0,
             n_drift_events=self.n_drift_events,

@@ -32,10 +32,31 @@ def test_find_combs_products():
 
 def test_enumerate_configs_chip_conservation():
     cluster = ClusterSpec(16, 8)
-    for ep, lp in enumerate_configs(cluster, has_encoder=True):
+    for ep, lp, sched in enumerate_configs(cluster, has_encoder=True):
+        assert sched == "1f1b"
         assert ep.chips + lp.chips == 16
-    for ep, lp in enumerate_configs(cluster, has_encoder=False):
+    for ep, lp, sched in enumerate_configs(cluster, has_encoder=False):
         assert ep is None and lp.chips == 16
+
+
+def test_enumerate_configs_schedule_families():
+    from repro.core.optimizer.space import SCHEDULES
+    cluster = ClusterSpec(16, 8)
+    seen = set()
+    for ep, lp, sched in enumerate_configs(cluster, has_encoder=True,
+                                           schedules=SCHEDULES):
+        seen.add(sched)
+        if sched == "encoder_fill":
+            # encoder is colocated on the LLM ranks: same tp/dp, pp=1
+            assert lp.chips == 16
+            assert (ep.tp, ep.pp, ep.dp) == (lp.tp, 1, lp.dp)
+            assert lp.pp >= 2
+        else:
+            assert ep.chips + lp.chips == 16
+    assert seen == set(SCHEDULES)
+    with pytest.raises(ValueError):
+        list(enumerate_configs(cluster, has_encoder=True,
+                               schedules=("bogus",)))
 
 
 def test_search_returns_feasible_plan():

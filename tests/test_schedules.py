@@ -1,0 +1,494 @@
+"""Schedule-family tests (docs/schedules.md): topology simulators pinned
+op-for-op against their reference event loops, plan validation, joint
+search, scheduler/composer threading, and the EDF + empty-window-metrics
+bugfix regressions that ride along in the same PR."""
+import time
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.common.types import ModelConfig
+from repro.core.engine import DFLOPEngine
+from repro.core.optimizer.space import (SCHEDULES, VIRTUAL_CHUNKS,
+                                        ClusterSpec, ModuleParallelism,
+                                        ParallelismPlan)
+from repro.core.pipeline.simulator import (encoder_fill_topology,
+                                           interleaved_topology,
+                                           reference_schedule_times,
+                                           simulate_1f1b_batch,
+                                           simulate_bucket_ranks_batch,
+                                           simulate_encoder_fill,
+                                           simulate_interleaved,
+                                           simulate_schedule_batch)
+from repro.core.scheduler.online import ScheduleOutput, _solver_durations
+from repro.data.composer import LookaheadComposer, edf_forced_count
+from repro.data.items import DataItem
+from repro.data.synthetic import MixedDataset
+from repro.runtime.metrics import RollingStat, RuntimeMetrics, nan_to_none
+
+ENC = ModelConfig(name="enc", family="vlm-enc", n_layers=12, d_model=512,
+                  n_heads=8, n_kv_heads=8, d_ff=2048, vocab_size=0,
+                  causal=False, use_rope=False, has_lm_head=False)
+LLM = ModelConfig(name="llm", family="dense", n_layers=16, d_model=1024,
+                  n_heads=16, n_kv_heads=4, d_ff=4096, vocab_size=32000)
+
+
+@pytest.fixture(scope="module")
+def engine():
+    ds = MixedDataset("mixed", seed=0, tokens_per_media_item=64)
+    eng = DFLOPEngine(llm_cfg=LLM, enc_cfg=ENC, e_seq_len=196,
+                      cluster=ClusterSpec(16, 8, mem_bytes=80e9),
+                      tokens_per_media_item=64)
+    return eng.profile(ds)
+
+
+# --------------------------------------------------------------------- #
+# batched wavefront == reference event loop, op for op
+# --------------------------------------------------------------------- #
+@settings(max_examples=25, deadline=None)
+@given(st.data())
+def test_interleaved_batch_matches_reference_op_for_op(data):
+    p = data.draw(st.integers(1, 4))
+    m = p * data.draw(st.integers(1, 3))
+    v = data.draw(st.integers(2, 3))
+    seed = data.draw(st.integers(0, 2 ** 16))
+    rng = np.random.default_rng(seed)
+    fwd = rng.uniform(0.1, 3.0, (2, p, m))
+    bwd = rng.uniform(0.1, 5.0, (2, p, m))
+    tr = simulate_schedule_batch("interleaved", fwd, bwd, v=v,
+                                 record_ops=True)
+    topo = interleaved_topology(p, m, v)
+    for b in range(2):
+        start, end = reference_schedule_times(topo, fwd[b], bwd[b])
+        np.testing.assert_array_equal(tr.op_start[b], start)
+        np.testing.assert_array_equal(tr.op_end[b], end)
+        assert tr.makespan[b] == end.max()
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.data())
+def test_encoder_fill_batch_matches_reference_op_for_op(data):
+    p = data.draw(st.integers(1, 4))
+    m = data.draw(st.integers(1, 6))
+    seed = data.draw(st.integers(0, 2 ** 16))
+    rng = np.random.default_rng(seed)
+    fwd = rng.uniform(0.1, 3.0, (2, p, m))
+    bwd = rng.uniform(0.1, 5.0, (2, p, m))
+    e_fwd = rng.uniform(0.01, 1.0, (2, p, m))
+    e_bwd = rng.uniform(0.01, 2.0, (2, p, m))
+    tr = simulate_schedule_batch("encoder_fill", fwd, bwd, e_fwd=e_fwd,
+                                 e_bwd=e_bwd, record_ops=True)
+    topo = encoder_fill_topology(p, m)
+    for b in range(2):
+        start, end = reference_schedule_times(topo, fwd[b], bwd[b],
+                                              e_fwd[b], e_bwd[b])
+        np.testing.assert_array_equal(tr.op_start[b], start)
+        np.testing.assert_array_equal(tr.op_end[b], end)
+        assert tr.makespan[b] == end.max()
+
+
+def test_schedule_batch_1f1b_is_bitwise_identical():
+    """schedule="1f1b" must BE the historical wavefront — same floats."""
+    rng = np.random.default_rng(0)
+    fwd = rng.uniform(0.1, 3.0, (4, 3, 6))
+    bwd = rng.uniform(0.1, 5.0, (4, 3, 6))
+    a = simulate_1f1b_batch(fwd, bwd, record_ops=True)
+    b = simulate_schedule_batch("1f1b", fwd, bwd, record_ops=True)
+    np.testing.assert_array_equal(a.makespan, b.makespan)
+    np.testing.assert_array_equal(a.stage_busy, b.stage_busy)
+    np.testing.assert_array_equal(a.f_end, b.f_end)
+    np.testing.assert_array_equal(a.b_end, b.b_end)
+    # ... and through the scheduler-bucket convention as well
+    e_b = rng.uniform(0.1, 2.0, 8)
+    l_b = rng.uniform(0.1, 2.0, 8)
+    kw = dict(n_mb=4, dp=2, e_pp=1, l_pp=2)
+    d = simulate_bucket_ranks_batch(e_b, l_b, **kw)
+    s = simulate_bucket_ranks_batch(e_b, l_b, schedule="1f1b", **kw)
+    np.testing.assert_array_equal(d.makespan, s.makespan)
+    with pytest.raises(ValueError):
+        simulate_schedule_batch("1f1b", fwd, bwd, e_fwd=fwd)
+
+
+def test_interleaved_homogeneous_closed_form():
+    """Homogeneous microbatches: makespan = (m + (p−1)/v) · (f + b)."""
+    for p, mult, v, f, b in [(2, 1, 2, 1.0, 2.0), (4, 2, 2, 0.5, 1.5),
+                             (3, 2, 3, 2.0, 2.0)]:
+        m = p * mult
+        tr = simulate_interleaved(np.full((p, m), f), np.full((p, m), b),
+                                  v=v)
+        expected = (m + (p - 1) / v) * (f + b)
+        np.testing.assert_allclose(tr.makespan, expected, rtol=1e-12)
+        # strictly better than plain 1F1B whenever there is a bubble
+        if p > 1:
+            plain = simulate_1f1b_batch(np.full((1, p, m), f),
+                                        np.full((1, p, m), b))
+            assert tr.makespan < float(plain.makespan[0])
+
+
+def test_encoder_fill_zero_encoder_degenerates_to_1f1b():
+    rng = np.random.default_rng(7)
+    fwd = rng.uniform(0.1, 3.0, (3, 4, 8))
+    bwd = rng.uniform(0.1, 5.0, (3, 4, 8))
+    zero = np.zeros_like(fwd)
+    ef = simulate_schedule_batch("encoder_fill", fwd, bwd, e_fwd=zero,
+                                 e_bwd=zero)
+    plain = simulate_1f1b_batch(fwd, bwd)
+    np.testing.assert_array_equal(ef.makespan, plain.makespan)
+
+
+def test_encoder_fill_fills_bubbles_below_serial_bound():
+    """Homogeneous case: the encoder chunks ride inside the warmup/drain
+    bubbles, so the makespan sits strictly between the LLM-only pipeline
+    and the conservative fully-serial closed form."""
+    p, m, f, b, ef, eb = 4, 8, 1.0, 2.0, 0.25, 0.5
+    tr = simulate_encoder_fill(np.full((p, m), f), np.full((p, m), b),
+                               np.full((p, m), ef), np.full((p, m), eb))
+    llm_only = (m + p - 1) * (f + b)
+    serial = (m + p - 1) * (f + b + ef + eb)
+    assert llm_only < tr.makespan < serial
+
+
+# --------------------------------------------------------------------- #
+# plan axis: validation, bubble arithmetic, chip accounting
+# --------------------------------------------------------------------- #
+def test_plan_schedule_validation():
+    lp = ModuleParallelism(2, 4, 1)
+    with pytest.raises(ValueError, match="unknown schedule"):
+        ParallelismPlan(llm=lp, n_mb=8, schedule="gpipe")
+    with pytest.raises(ValueError, match="divisible"):
+        ParallelismPlan(llm=lp, n_mb=6, schedule="interleaved")
+    with pytest.raises(ValueError, match="depth >= 2"):
+        ParallelismPlan(llm=ModuleParallelism(2, 1, 4), n_mb=4,
+                        schedule="interleaved")
+    with pytest.raises(ValueError, match="needs an encoder"):
+        ParallelismPlan(llm=lp, n_mb=8, schedule="encoder_fill")
+    with pytest.raises(ValueError, match="colocates"):
+        ParallelismPlan(llm=lp, encoder=ModuleParallelism(1, 1, 1), n_mb=8,
+                        schedule="encoder_fill")
+
+
+def test_plan_schedule_properties():
+    lp = ModuleParallelism(2, 4, 1)
+    ep = ModuleParallelism(2, 1, 1)
+    p1 = ParallelismPlan(llm=lp, encoder=ep, n_mb=8)
+    pi = ParallelismPlan(llm=lp, n_mb=8, schedule="interleaved")
+    pe = ParallelismPlan(llm=lp, encoder=ep, n_mb=8,
+                         schedule="encoder_fill")
+    assert (p1.pipeline_depth, p1.bubble_slots) == (5, 4)
+    assert (pi.pipeline_depth, pi.bubble_slots) == (4, 3 / VIRTUAL_CHUNKS)
+    # encoder_fill: the encoder holds no stages and occupies no extra chips
+    assert (pe.pipeline_depth, pe.bubble_slots) == (4, 3)
+    assert pe.chips == lp.chips and p1.chips == lp.chips + ep.chips
+    # θ widens: the 8-tuple carries the family, so every as_tuple()
+    # consumer (composer plan key, controller records, reshard reports)
+    # distinguishes schedule-only plan changes
+    assert p1.as_tuple()[-1] == "1f1b" and pe.as_tuple()[-1] == "encoder_fill"
+    assert p1.as_tuple()[:-1] == pe.as_tuple()[:-1]
+
+
+# --------------------------------------------------------------------- #
+# joint search over the schedule axis
+# --------------------------------------------------------------------- #
+def test_search_single_family_restrictions(engine):
+    for fam in SCHEDULES:
+        res = engine.plan(gbs=32, schedules=(fam,))
+        assert res.found, fam
+        assert res.plan.schedule == fam
+        if fam == "interleaved":
+            assert res.plan.n_mb % res.plan.pipeline_depth == 0
+            assert (res.plan.llm.pp * VIRTUAL_CHUNKS
+                    <= engine.perf.llm.cfg.n_layers)
+        if fam == "encoder_fill":
+            lp = res.plan.llm
+            assert res.plan.encoder == ModuleParallelism(lp.tp, 1, lp.dp)
+            assert lp.chips == engine.cluster.n_chips
+
+
+def test_search_joint_schedule_family(engine):
+    base = engine.plan(gbs=32, schedules=("1f1b",))
+    joint = engine.plan(gbs=32)          # the default IS the joint search
+    assert base.plan.schedule == "1f1b"
+    assert joint.found and joint.plan.schedule in SCHEDULES
+    # the 1f1b-only winner stays in the joint candidate space, so the
+    # joint optimum can only improve on (or match) it
+    assert joint.makespan <= base.makespan * (1 + 1e-9)
+
+
+# --------------------------------------------------------------------- #
+# scheduler: solver durations + step_makespan across families
+# --------------------------------------------------------------------- #
+def test_solver_durations_encoder_fill_combines_serially():
+    lp = ModuleParallelism(1, 4, 1)
+    plan = ParallelismPlan(llm=lp, encoder=ModuleParallelism(1, 1, 1),
+                           n_mb=4, schedule="encoder_fill")
+    e = np.array([4.0, 8.0])
+    l = np.array([1.0, 2.0])
+    se, sl = _solver_durations(plan, e, l)
+    np.testing.assert_allclose(se, l + e / 4)
+    np.testing.assert_allclose(sl, se)   # max(Σc, Σc) degenerates to Σc
+    # staged families keep the two module loads independent
+    se, sl = _solver_durations(ParallelismPlan(llm=lp, n_mb=4), e, l)
+    assert se is e and sl is l
+
+
+def test_step_makespan_uses_family_bubble_slots():
+    lp = ModuleParallelism(1, 4, 1)
+    out = dict(groups=[], lower_bound=1.0, solver="lpt", elapsed_s=0.0,
+               e_dur=np.zeros(1), l_dur=np.zeros(1))
+    s1 = ScheduleOutput(cmax=2.0, plan=ParallelismPlan(llm=lp, n_mb=8),
+                        **out)
+    si = ScheduleOutput(cmax=2.0, plan=ParallelismPlan(
+        llm=lp, n_mb=8, schedule="interleaved"), **out)
+    assert s1.step_makespan == (8 + 3) * 2.0
+    assert si.step_makespan == (8 + 3 / VIRTUAL_CHUNKS) * 2.0
+    assert si.step_makespan < s1.step_makespan
+
+
+def test_scheduler_balances_combined_load_under_encoder_fill(engine):
+    plan = ParallelismPlan(llm=ModuleParallelism(1, 4, 2),
+                           encoder=ModuleParallelism(1, 1, 2), n_mb=2,
+                           schedule="encoder_fill")
+    sched = engine.scheduler(plan=plan, adaptive=False,
+                             ilp_time_limit_s=0.02)
+    ds = MixedDataset("mixed", seed=3, tokens_per_media_item=64)
+    out = sched.schedule(ds.sample(32))
+    assert len(out.groups) == plan.n_buckets
+    comb = out.l_dur + out.e_dur / plan.llm.pp
+    loads = [comb[g].sum() for g in out.groups]
+    assert np.isclose(out.cmax, max(loads))
+    assert out.step_makespan >= out.cmax
+
+
+# --------------------------------------------------------------------- #
+# composer: schedule-only plan change must flush and re-price
+# --------------------------------------------------------------------- #
+class _CountingSched:
+    mode = "train"
+
+    def __init__(self, plan):
+        self.plan = plan
+        self.n_duration_calls = 0
+
+    def set_plan(self, plan):
+        self.plan = plan
+
+    def item_durations(self, items, plan=None):
+        self.n_duration_calls += 1
+        e = np.array([it.encoder_batch() for it in items], float) + 0.1
+        return e, np.array([it.llm_seq_len(4) for it in items], float)
+
+
+def test_composer_reprices_on_schedule_only_plan_change():
+    lp = ModuleParallelism(1, 2, 1)
+    plan_a = ParallelismPlan(llm=lp, encoder=ModuleParallelism(1, 1, 1),
+                             n_mb=2)
+    plan_b = ParallelismPlan(llm=lp, encoder=ModuleParallelism(1, 1, 1),
+                             n_mb=2, schedule="encoder_fill")
+    assert plan_a.as_tuple() != plan_b.as_tuple()    # the widened θ key
+    sched = _CountingSched(plan_a)
+    comp = LookaheadComposer(sched, gbs=4, window=2)
+    comp.push([DataItem(1 + i % 3, 16 + i, "single_image", i)
+               for i in range(8)])
+    comp.compose()
+    assert sched.n_duration_calls == 1
+    comp.compose()                       # survivors already priced
+    comp.push([DataItem(2, 20, "single_image", 100 + i) for i in range(8)])
+    assert sched.n_duration_calls == 1 or comp.pending == 0
+    # schedule-only hot-swap, controller "forgot" flush_plan(): the
+    # as_tuple() identity check must re-price the whole window anyway
+    sched.set_plan(plan_b)
+    before = sched.n_duration_calls
+    comp.compose()
+    assert sched.n_duration_calls == before + 1
+    assert comp._plan_key == plan_b.as_tuple()
+    # the explicit flush path keeps working too
+    comp.flush_plan()
+    assert comp.n_flushes == 1
+    assert all(en.e < 0 for en in comp._entries)
+
+
+# --------------------------------------------------------------------- #
+# EDF reservation: O(n) allocation regardless of slack magnitude
+# --------------------------------------------------------------------- #
+def _edf_naive(slack, per_step):
+    slack = np.maximum(np.asarray(slack, dtype=np.int64), 0)
+    best = 0
+    for j in range(int(slack.max()) + 1):
+        best = max(best, int((slack <= j).sum()) - j * per_step)
+    return max(best, 0)
+
+
+def test_edf_forced_count_large_slack_no_giant_allocation():
+    """Regression: np.bincount over raw slack allocated O(max slack) —
+    one relaxed deadline (slack ~1e9) meant gigabytes.  The horizon clip
+    must keep this instant and exact."""
+    t0 = time.monotonic()
+    assert edf_forced_count([0, 10 ** 9], per_step=1) == 1
+    assert edf_forced_count([0, 0, 10 ** 12, 10 ** 12], per_step=1) == 2
+    assert edf_forced_count([10 ** 9] * 8, per_step=2) == 0
+    assert edf_forced_count([0, 1, 10 ** 9, -5], per_step=0) == 4
+    assert time.monotonic() - t0 < 1.0
+
+
+def test_edf_forced_count_horizon_clip_is_exact():
+    rng = np.random.default_rng(11)
+    for _ in range(200):
+        n = int(rng.integers(1, 12))
+        per_step = int(rng.integers(1, 5))
+        slack = rng.integers(-2, 10, n)
+        assert edf_forced_count(slack, per_step) == \
+            _edf_naive(slack, per_step)
+        # adding huge-slack entries must not change the forced count when
+        # they land beyond the forcing horizon
+        fat = np.concatenate([slack, [10 ** 9, 10 ** 10]])
+        assert edf_forced_count(fat, per_step) == \
+            _edf_naive(np.minimum(fat, 64), per_step)
+
+
+class _FakePricer:
+    def base(self, r):
+        return r.cost, r.cost, r.seq
+
+    def price(self, r):
+        return r.cost
+
+    def predict(self, r, s_pad):
+        return r.cost
+
+    def decode_estimate(self, r):
+        return 0.0
+
+
+class _FakeReq:
+    def __init__(self, rid, deadline_s, cost=1.0, seq=64):
+        self.rid = rid
+        self.arrival_s = 0.0
+        self.cost = cost
+        self.seq = seq
+        self._deadline = deadline_s
+
+    def slack_s(self, now_s, work_s):
+        return self._deadline - now_s - work_s
+
+
+def test_slo_admission_survives_relaxed_deadlines():
+    """Serving-side consumer of the EDF fix: requests with effectively
+    unbounded SLOs (slack ~1e9 admission rounds) must not blow up the
+    reservation, and the due request still ships first."""
+    from repro.serve.admission import SLOAdmission
+    adm = SLOAdmission(_FakePricer())
+    # request 0 is deadline-feasible but due now (slack < one admission
+    # round); the rest have effectively unbounded SLOs
+    pending = [_FakeReq(0, deadline_s=1.2)] + \
+        [_FakeReq(i, deadline_s=1e9, seq=64 + i) for i in range(1, 12)]
+    t0 = time.monotonic()
+    picked = adm.select(pending, now_s=0.0, max_batch=4)
+    assert time.monotonic() - t0 < 1.0
+    assert len(picked) == 4
+    assert any(r.rid == 0 for r in picked)
+    assert adm.last_n_forced >= 1
+
+
+# --------------------------------------------------------------------- #
+# empty-window metrics: NaN, rendered as absent — never a fake 0.0
+# --------------------------------------------------------------------- #
+def test_rolling_stat_empty_window_is_nan_not_zero():
+    s = RollingStat()
+    assert np.isnan(s.mean()) and np.isnan(s.max())
+    assert np.isnan(s.last()) and np.isnan(s.quantile(0.99))
+    s.add(0.0)                           # a measured zero is a real value
+    assert s.mean() == 0.0 and s.last() == 0.0 and s.quantile(0.5) == 0.0
+    assert nan_to_none(float("nan")) is None
+    assert nan_to_none(0.0) == 0.0 and nan_to_none(7) == 7
+
+
+def test_metrics_snapshot_reports_missing_stats_as_none():
+    import json
+    m = RuntimeMetrics()
+    snap = m.snapshot()
+    assert snap["imbalance_mean"] is None
+    assert snap["step_time_mean_s"] is None
+    assert snap["serve"]["latency_p99_s"] is None
+    json.dumps(snap)                     # strictly JSON-serializable
+    assert "NaN" not in json.dumps(snap)
+    m.record_step(step_time_s=2.0, idle_s=0.5)
+    snap = m.snapshot()
+    assert snap["step_time_mean_s"] == 2.0
+    assert snap["bubble_fraction_mean"] == pytest.approx(0.25)
+
+
+def test_serve_report_row_maps_nan_to_none():
+    from repro.serve.engine import ServeReport
+    rep = ServeReport(policy="fifo", n_requests=4, n_completed=0,
+                      n_slo_met=0, makespan_s=1.0, goodput_rps=0.0,
+                      throughput_rps=0.0, p50_latency_s=float("nan"),
+                      p99_latency_s=float("nan"), mean_ttft_s=float("nan"),
+                      mean_queue_depth=2.0, mean_occupancy=float("nan"),
+                      n_prefill_batches=1, n_decode_steps=0,
+                      n_drift_events=0, n_compiles=1)
+    row = rep.row()
+    assert row["p99_latency_s"] is None and row["mean_ttft_s"] is None
+    assert row["mean_queue_depth"] == 2.0 and row["n_completed"] == 0
+
+
+# --------------------------------------------------------------------- #
+# bench snapshots: --check schema validation + fig20 smoke/acceptance
+# --------------------------------------------------------------------- #
+def _bench_snapshot_module():
+    import importlib.util
+    from pathlib import Path
+    path = Path(__file__).resolve().parent.parent / "tools" / \
+        "bench_snapshot.py"
+    spec = importlib.util.spec_from_file_location("bench_snapshot", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_bench_snapshot_check_passes_on_committed_files():
+    mod = _bench_snapshot_module()
+    assert mod.check() == []
+
+
+def test_bench_snapshot_check_rejects_bad_snapshots(tmp_path, monkeypatch):
+    mod = _bench_snapshot_module()
+    monkeypatch.setattr(mod, "REPO", tmp_path)
+    probs = mod.check(["BENCH_train.json"])
+    assert probs and "missing" in probs[0]
+    (tmp_path / "BENCH_train.json").write_text(
+        '{"git": "abc", "figures": {"fig20": {"module": "m", "args": {}, '
+        '"wall_s": 1.0, "headline": [{"sim_speedup": NaN}]}}}')
+    probs = mod.check(["BENCH_train.json"])
+    assert probs and "non-finite" in probs[0]
+    (tmp_path / "BENCH_train.json").write_text(
+        '{"git": "abc", "figures": {"fig20": {"module": "m", '
+        '"wall_s": 1.0, "headline": []}}}')
+    probs = mod.check(["BENCH_train.json"])
+    assert any("missing 'args'" in p for p in probs)
+    assert any("non-empty" in p for p in probs)
+
+
+def test_fig20_smoke():
+    """Tier-1: both searches + the emulation loop run end to end; the
+    summary row carries the acceptance-bearing fields."""
+    from benchmarks.fig20_schedules import run_smoke
+    rows = run_smoke()
+    summary = rows[-1]
+    assert summary.get("summary") is True
+    assert summary["joint_schedule"] in SCHEDULES
+    assert summary["sim_speedup"] > 0 and summary["pred_speedup"] > 0
+    systems = {r["system"] for r in rows if "system" in r}
+    assert systems == {"1f1b", "joint"}
+
+
+@pytest.mark.slow
+def test_fig20_schedule_search_acceptance():
+    """Acceptance (ISSUE 7): joint schedule search reaches ≥1.1× lower
+    emulated step makespan than 1F1B-only on the encoder-heavy mixture,
+    with a strictly lower emulated bubble fraction."""
+    from benchmarks.fig20_schedules import run
+    summary = run()[-1]
+    assert summary["sim_speedup"] >= 1.1
+    assert summary["bubble_joint"] < summary["bubble_1f1b"]

@@ -7,13 +7,19 @@ headline benchmarks and writes their *summary* rows (the acceptance-bearing
 numbers, not the full row dumps) to committed JSON files at the repo root:
 
   * ``BENCH_train.json``   — fig16 (drift re-plan recovery), fig17
-    (objective sweep), fig18 (lookahead composer);
+    (objective sweep), fig18 (lookahead composer), fig20 (schedule-family
+    search);
   * ``BENCH_serving.json`` — fig19 (data-aware serving goodput/p99).
 
 Run from the repo root (about a minute of wall clock):
 
     PYTHONPATH=src python tools/bench_snapshot.py            # all
     PYTHONPATH=src python tools/bench_snapshot.py --only serving
+    PYTHONPATH=src python tools/bench_snapshot.py --check    # validate only
+
+``--check`` validates the committed snapshots without re-running anything
+(tier-1 CI): strict JSON (no NaN/Infinity literals — missing stats must be
+null), the expected top-level shape, and a non-empty headline per figure.
 
 Snapshots are deterministic (fixed seeds, virtual-time emulations) up to
 wall-clock-dependent fields, which are excluded from the summary rows the
@@ -29,6 +35,7 @@ import subprocess
 import sys
 import time
 from pathlib import Path
+from typing import List
 
 REPO = Path(__file__).resolve().parent.parent
 
@@ -41,6 +48,7 @@ SNAPSHOTS = {
                   {"gbs_sweep": (32, 128, 512), "n_trials": 8,
                    "n_eval": 8}),
         "fig18": ("benchmarks.fig18_composer", {"n_batches": 48}),
+        "fig20": ("benchmarks.fig20_schedules", {"n_iters": 4}),
     },
     "BENCH_serving.json": {
         "fig19": ("benchmarks.fig19_serving", {}),
@@ -83,12 +91,66 @@ def snapshot(name: str, figures: dict) -> dict:
     return out
 
 
+def _reject_nonfinite(_name: str):
+    raise ValueError(f"non-finite literal {_name!r} in snapshot — missing "
+                     "stats must be null, never NaN/Infinity")
+
+
+def check(names=None) -> List[str]:
+    """Validate committed BENCH_*.json snapshots; returns problems found.
+
+    Strict JSON (``NaN``/``Infinity`` literals rejected — `json.dumps`
+    happily emits them but they are not JSON, and a missing stat must be
+    ``null``), the expected top-level shape, and per figure a non-empty
+    ``headline`` list of objects.
+    """
+    problems: List[str] = []
+    for name in (SNAPSHOTS if names is None else names):
+        path = REPO / name
+        if not path.is_file():
+            problems.append(f"{name}: missing (run tools/bench_snapshot.py)")
+            continue
+        try:
+            data = json.loads(path.read_text(encoding="utf-8"),
+                              parse_constant=_reject_nonfinite)
+        except ValueError as e:
+            problems.append(f"{name}: invalid JSON: {e}")
+            continue
+        if not isinstance(data, dict) or "figures" not in data \
+                or "git" not in data:
+            problems.append(f"{name}: expected {{git, figures}} object")
+            continue
+        for fig, entry in data["figures"].items():
+            for key in ("module", "args", "wall_s", "headline"):
+                if key not in entry:
+                    problems.append(f"{name}: {fig}: missing {key!r}")
+            headline = entry.get("headline")
+            if not (isinstance(headline, list) and headline
+                    and all(isinstance(r, dict) for r in headline)):
+                problems.append(
+                    f"{name}: {fig}: headline must be a non-empty "
+                    "list of summary rows")
+    return problems
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="comma list: train,serving (default: all)")
+    ap.add_argument("--check", action="store_true",
+                    help="validate committed snapshots, run nothing")
     args = ap.parse_args()
     only = {s.strip() for s in args.only.split(",") if s.strip()}
+    names = [n for n in SNAPSHOTS
+             if not only or n.removeprefix("BENCH_").removesuffix(".json")
+             in only]
+    if args.check:
+        problems = check(names)
+        for p in problems:
+            print(f"CHECK FAIL: {p}")
+        if not problems:
+            print(f"ok: {', '.join(names)}")
+        return 1 if problems else 0
     sys.path.insert(0, str(REPO / "src"))
     sys.path.insert(0, str(REPO))
     for name, figures in SNAPSHOTS.items():

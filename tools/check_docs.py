@@ -34,6 +34,7 @@ DOC_FILES = (
 REQUIRED = [
     "docs/ARCHITECTURE.md",
     "docs/simulator.md",
+    "docs/schedules.md",
     "docs/objectives.md",
     "docs/resharding.md",
     "docs/data.md",
@@ -46,6 +47,7 @@ REQUIRED = [
 DOCTEST_MODULES = [
     "repro.core.pipeline.simulator",
     "repro.core.optimizer.makespan",
+    "repro.core.optimizer.space",
     "repro.launch.reshard",
     "repro.data.composer",
     "repro.serve.request",
