@@ -1,0 +1,172 @@
+"""Fig. 21 (extension): makespan recovery after a host loss — elastic
+re-plan + reshard vs naive stall.
+
+Kills one emulated host at step ``fail_at`` and repairs it
+``repair_steps`` steps later, then compares two policies completing the
+same ``n_steps`` global batches in virtual time:
+
+  * **naive stall** — synchronous training cannot proceed without the
+    lost host: the run stalls for the whole outage, then finishes every
+    step at the full-fleet rate t_N (what a checkpoint-restore pipeline
+    without elasticity effectively does, minus the restore cost — a
+    *favourable* baseline).
+  * **elastic** — the `repro.runtime` controller drains the membership
+    event, re-plans for the surviving roster (measured search wall time),
+    migrates live params through the `ParamSwapper` path (measured
+    reshard when enough local devices exist, bytes/bandwidth model
+    otherwise), and keeps training at the degraded rate t_{N-1} until the
+    host returns, paying a second measured recovery at rejoin.
+
+Both runs schedule *identical* batches; per-step virtual durations are
+the scheduler's plan-aware ``step_makespan`` predictions, so the curve
+isolates the policy difference (stall vs degraded progress) plus the
+measured recovery costs.  The outage's wall-clock length is the same for
+both policies by construction — the elastic run's recovery + degraded
+steps define it — so the comparison reduces to: is the work done during
+the outage worth more than the rejoin recovery cost?
+
+Summary headline: ``speedup = makespan_naive_s / makespan_elastic_s``
+(> 1 = re-plan + reshard beats naive stall; the fig21 acceptance).
+"""
+from __future__ import annotations
+
+import os
+
+from benchmarks.common import engine_for
+from repro.core.optimizer.space import ClusterSpec
+from repro.data.host_shard import HostShardedSource
+from repro.data.synthetic import MixedDataset
+from repro.launch.fleet import FaultInjector, FleetManager
+
+TRACE_PATH = os.path.join(os.path.dirname(__file__), "results",
+                          "fig21_elastic_trace.json")
+
+
+def _maybe_physical_swapper(fleet, n_layers, pp):
+    """Measured reshard path when the process has enough local devices to
+    host the fleet; (None, modeled_cost_fn) otherwise."""
+    import jax
+
+    from repro.launch.reshard import (ParamSwapper, estimate_reshard_s,
+                                      param_bytes)
+    from benchmarks.fig16_replan import _synthetic_stacked_params
+
+    params, stacked = _synthetic_stacked_params(n_layers, pp)
+    if len(jax.devices()) >= fleet.n_hosts * fleet.devices_per_host:
+        live = {"p": params}
+        sw = ParamSwapper(lambda: live["p"], lambda p: live.update(p=p),
+                          stage_stacked=stacked, strict=False,
+                          mesh_factory=fleet.plan_mesh)
+        return sw, None
+    return None, lambda: estimate_reshard_s(param_bytes(params))
+
+
+def run(arch: str = "internvl2-2b", gbs: int = 32, n_steps: int = 24,
+        fail_at: int = 6, repair_steps: int = 8, n_hosts: int = 8,
+        seed: int = 0, recovery_wall_s: float | None = None):
+    assert 0 < fail_at and fail_at + repair_steps < n_steps, \
+        "the outage must open and close inside the run"
+    cluster = ClusterSpec(n_chips=n_hosts, chips_per_node=n_hosts)
+    eng = engine_for(arch, cluster, mixture="mixed", seed=seed)
+    res0 = eng.plan(gbs)
+    assert res0.found, f"{arch} has no feasible plan on {n_hosts} chips"
+
+    import jax
+    devices = (list(jax.devices()) if len(jax.devices()) >= n_hosts
+               else list(range(n_hosts)))
+    fleet = FleetManager(devices=devices[:n_hosts], devices_per_host=1)
+    swapper, modeled_cost = _maybe_physical_swapper(
+        fleet, eng.llm_cfg.n_layers, eng.plan_result.plan.llm.pp)
+    ctl = eng.runtime(gbs, adaptive=False, auto_replan=False,
+                      calibrate=False, ilp_time_limit_s=0.05,
+                      param_swapper=swapper, fleet=fleet)
+    plan_n = ctl.plan
+    # the naive policy runs every step under the full-fleet plan
+    naive_sched = eng.scheduler(plan=plan_n, adaptive=False,
+                                ilp_time_limit_s=0.05)
+    injector = FaultInjector(fleet, {fail_at: [("fail", n_hosts - 1)],
+                                     fail_at + repair_steps:
+                                         [("join", n_hosts - 1)]})
+    ds = MixedDataset("mixed", seed=seed, tokens_per_media_item=eng.tokens_per_media_item)
+    src = HostShardedSource(lambda: ds.sample(gbs), gbs=gbs, fleet=fleet,
+                            keep_committed=False)
+
+    rows, cum_e, cum_n = [], 0.0, 0.0
+    recovery_costs = []
+    for i in range(n_steps):
+        injector.on_step(i)
+        src.draw()
+        items = src.in_flight
+        n_rec_before = len(ctl.recoveries)
+        out = ctl.schedule(items)        # poll_fleet -> recovery runs here
+        src.commit()
+        rec_cost = 0.0
+        for rec in ctl.recoveries[n_rec_before:]:
+            if recovery_wall_s is not None:   # pinned cost -> deterministic
+                rec_cost += recovery_wall_s   # snapshot (cf. fig16's
+                continue                      # step_wall_s)
+            rec_cost += rec.elapsed_s
+            if modeled_cost is not None:
+                rec_cost += modeled_cost()   # no devices: model the reshard
+        recovery_costs.append(rec_cost)
+        t_e = float(out.step_makespan)
+        t_n = float(naive_sched.schedule(items).step_makespan)
+        in_outage = fail_at <= i < fail_at + repair_steps
+        cum_e += rec_cost + t_e
+        # naive: stalls through the outage (it still pays those steps
+        # after repair); the stall length is the elastic side's outage
+        # wall-clock, added when the outage closes below
+        cum_n += t_n
+        rows.append({
+            "figure": "fig21", "iter": i,
+            "phase": ("outage" if in_outage else
+                      "pre" if i < fail_at else "post"),
+            "n_alive": fleet.n_alive,
+            "plan": list(out.plan.as_tuple()),
+            "recovery_cost_s": rec_cost,
+            "t_elastic_s": t_e, "t_naive_s": t_n,
+            "cum_elastic_s": cum_e, "cum_naive_s": cum_n,
+        })
+    # outage wall-clock = elastic recovery at failure + degraded steps
+    outage_rows = [r for r in rows if r["phase"] == "outage"]
+    stall_s = float(sum(r["recovery_cost_s"] + r["t_elastic_s"]
+                        for r in outage_rows))
+    cum_n += stall_s
+    makespan_e, makespan_n = cum_e, cum_n
+
+    recs = ctl.recoveries
+    summary = {
+        "figure": "fig21", "iter": -1, "phase": "summary", "summary": True,
+        "n_hosts": n_hosts, "fail_at": fail_at,
+        "repair_steps": repair_steps,
+        "plan_full": list(plan_n.as_tuple()),
+        "plan_degraded": (list(recs[0].new_plan_tuple)
+                          if recs and recs[0].new_plan_tuple else
+                          list(plan_n.as_tuple())),
+        "n_recoveries": len(recs),
+        "n_degraded": sum(r.degraded for r in recs),
+        "recovery_cost_total_s": float(sum(recovery_costs)),
+        "recovery_wall_s": recovery_wall_s,
+        "reshard_measured": swapper is not None and recovery_wall_s is None,
+        "stall_s": stall_s,
+        "makespan_naive_s": makespan_n,
+        "makespan_elastic_s": makespan_e,
+        "speedup": makespan_n / max(makespan_e, 1e-12),
+    }
+    rows.append(summary)
+    os.makedirs(os.path.dirname(TRACE_PATH), exist_ok=True)
+    ctl.export_trace(TRACE_PATH)
+    ctl.close()
+    return rows
+
+
+def run_smoke():
+    """CI smoke: one failure + one rejoin on a tiny run — pins the full
+    recover-while-training loop without the sweep's wall time."""
+    return run(gbs=16, n_steps=8, fail_at=2, repair_steps=3, n_hosts=4)
+
+
+if __name__ == "__main__":
+    for r in run():
+        if r["phase"] in ("summary",) or r["iter"] % 4 == 0:
+            print(r)

@@ -13,8 +13,17 @@ training state on device (clamped onto however many local devices exist)
 and the reshard lands in the trace and metrics.  `--shift-at K` switches
 the data mixture single-image → video at step K to force a mid-run drift.
 
+`--hosts N` runs the loop *elastically* on an emulated fleet: the local
+devices (force more with ``XLA_FLAGS=--xla_force_host_platform_device_count``)
+split into N hosts owned by a `repro.launch.fleet.FleetManager`, each
+global batch is sharded per host with exactly-once accounting, and
+`--fail-host-at K` / `--revive-host-at K` drive a `FaultInjector` that
+kills / revives the last host at those steps — the controller recovers
+checkpoint-free (re-plan for the survivors + live param migration).
+
     PYTHONPATH=src python examples/train_mllm.py [--steps 200] [--random]
         [--trace runtime_trace.json] [--replan] [--shift-at 8]
+        [--hosts 4 --fail-host-at 6 --revive-host-at 12]
 """
 import argparse
 import time
@@ -27,6 +36,8 @@ from repro.common.types import MLLMConfig, ModalityStub, ModelConfig
 from repro.core.engine import DFLOPEngine
 from repro.core.optimizer.space import ClusterSpec, ModuleParallelism, ParallelismPlan
 from repro.data.synthetic import MixedDataset
+from repro.data.host_shard import HostShardedSource
+from repro.launch.fleet import FaultInjector, FleetManager
 from repro.launch.reshard import ParamSwapper, clamped_plan_mesh
 from repro.runtime import DriftDetector
 from repro.models import mllm as mllm_lib
@@ -118,7 +129,23 @@ def main():
     ap.add_argument("--tiny", action="store_true",
                     help="sub-1M-param model (CI smoke: compiles in "
                          "seconds, same control-loop code paths)")
+    ap.add_argument("--hosts", type=int, default=0,
+                    help="split the local devices into this many emulated "
+                         "hosts and run elastically (0 = single-host)")
+    ap.add_argument("--fail-host-at", type=int, default=0,
+                    help="kill the last emulated host at this step "
+                         "(requires --hosts; 0 = no failure)")
+    ap.add_argument("--revive-host-at", type=int, default=0,
+                    help="revive the killed host at this step")
     args = ap.parse_args()
+    if (args.fail_host_at or args.revive_host_at) and not args.hosts:
+        ap.error("--fail-host-at/--revive-host-at need --hosts")
+    if args.hosts and args.random:
+        ap.error("--random bypasses the controller, so fleet recovery "
+                 "(poll_fleet) would never run; drop one of the two flags")
+    if args.hosts and args.compose_window:
+        ap.error("--hosts draws through the per-host sharded source; "
+                 "combine it with --compose-window is not supported yet")
     if args.random and args.replan:
         ap.error("--random bypasses the control loop (schedule_random "
                  "never reaches the controller), so --replan would only "
@@ -150,9 +177,23 @@ def main():
     # moves with the parameters) on the plan's mesh, clamped onto the
     # local devices.
     live = {"state": (params, opt)}
-    swapper = ParamSwapper(lambda: live["state"],
-                           lambda s: live.update(state=s),
-                           mesh_factory=clamped_plan_mesh)
+    fleet = injector = None
+    if args.hosts:
+        fleet = FleetManager(n_hosts=args.hosts)
+        schedule = {}
+        victim = fleet.n_hosts - 1
+        if args.fail_host_at:
+            schedule[args.fail_host_at] = [("fail", victim)]
+        if args.revive_host_at:
+            schedule[args.revive_host_at] = [("join", victim)]
+        injector = FaultInjector(fleet, schedule)
+        print(f"[fleet] {fleet.n_hosts} hosts x "
+              f"{fleet.devices_per_host} devices  schedule={schedule}")
+    swapper = ParamSwapper(
+        lambda: live["state"], lambda s: live.update(state=s),
+        # fleet runs migrate onto the surviving roster; single-host runs
+        # keep the device-count clamp
+        mesh_factory=fleet.plan_mesh if fleet else clamped_plan_mesh)
     # tighter drift window than the default so a --shift-at demo fires
     # within a few global batches at GBS 16
     drift = DriftDetector(window=128, check_every=32, cooldown=64)
@@ -160,7 +201,8 @@ def main():
                       auto_replan=args.replan, drift=drift,
                       param_swapper=swapper,
                       compose_window=args.compose_window,
-                      max_staleness=args.max_staleness or None)
+                      max_staleness=args.max_staleness or None,
+                      fleet=fleet)
     sched = ctl.scheduler
     composer = ctl.composer
 
@@ -169,11 +211,23 @@ def main():
         mcfg, AdamWConfig(lr=1e-3),
         ctx=FwdCtx(mode="train", attn_impl="chunked")))
 
+    hsrc = None
+    if fleet is not None:
+        current = {"ds": ds}
+        hsrc = HostShardedSource(lambda: current["ds"].sample(GBS), GBS,
+                                 fleet=fleet, keep_committed=False)
+
     losses, pred_cmax = [], []
     t0 = time.time()
     for k in range(args.steps):
         active_ds = post_ds if (post_ds and k >= args.shift_at) else ds
-        if composer is not None:
+        if injector is not None:
+            injector.on_step(k)      # roster mutates before this step draws
+        if hsrc is not None:
+            current["ds"] = active_ds
+            shards = hsrc.draw()     # per-host split over the alive roster
+            items = hsrc.in_flight
+        elif composer is not None:
             # refills the window to capacity (first call warms the full
             # W-batch lookahead), then emits one composed batch
             items = ctl.compose(draw=lambda: active_ds.sample(GBS))
@@ -190,6 +244,8 @@ def main():
         m["loss"].block_until_ready()
         ctl.observe_step(out, time.time() - ts)
         live["state"] = (params, opt)
+        if hsrc is not None:
+            hsrc.commit()            # step survived: batch delivered once
         losses.append(float(m["loss"]))
         if k % 25 == 0:
             print(f"step {k:4d}  loss={losses[-1]:.3f}  "
@@ -206,6 +262,14 @@ def main():
           f"replans={snap['n_replans']}  "
           f"physical_swaps={snap['n_physical_swaps']}  "
           f"reshard_mean_s={snap['reshard_mean_s']:.4f}")
+    if fleet is not None:
+        fl = snap["fleet"]
+        print(f"[fleet] hosts={fleet.n_alive}/{fleet.n_hosts}  "
+              f"failures={fl['n_host_failures']}  "
+              f"joins={fl['n_host_joins']}  "
+              f"recoveries={fl['n_recoveries']}  "
+              f"degraded={fl['n_degraded']}  "
+              f"committed={hsrc.n_committed}  aborted={hsrc.n_aborted}")
     if composer is not None:
         print(f"[compose] batches={snap['n_composed']}  "
               f"pred_gain_mean={snap['compose_pred_gain_mean']:.3f}  "

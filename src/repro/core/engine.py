@@ -118,7 +118,8 @@ class DFLOPEngine:
                 param_swapper=None,
                 swap_horizon_batches: int = 50,
                 compose_window: int = 0,
-                max_staleness: Optional[int] = None):
+                max_staleness: Optional[int] = None,
+                fleet=None):
         """Closed control loop: returns a `repro.runtime.RuntimeController`
         wrapping this engine + a fresh scheduler.  Plans first if needed.
 
@@ -133,7 +134,14 @@ class DFLOPEngine:
         may wait in it (default ``2·W``).  The controller wires the
         composer's telemetry and flushes its window pricing on plan
         hot-swaps; feed it via ``ctl.compose(draw=...)`` or
-        ``ScheduledLoader(composer=ctl.composer)``."""
+        ``ScheduledLoader(composer=ctl.composer)``.
+
+        ``fleet`` (see `repro.launch.fleet.FleetManager`) makes the loop
+        *elastic*: the controller drains membership events at batch
+        boundaries (`poll_fleet`) and recovers checkpoint-free — re-plan
+        for the surviving roster, migrate live params via
+        ``param_swapper`` (use ``mesh_factory=fleet.plan_mesh``), degrade
+        instead of crashing when either fails."""
         from repro.runtime import (DriftDetector, OnlineCalibrator,
                                    RuntimeController, RuntimeMetrics,
                                    TraceRecorder)
@@ -159,7 +167,8 @@ class DFLOPEngine:
             replan_n_trials=replan_n_trials,
             param_swapper=param_swapper,
             swap_horizon_batches=swap_horizon_batches,
-            composer=composer)
+            composer=composer,
+            fleet=fleet)
 
     # ------------------------------------------------------------------ #
     def serving(self, *, admission: str = "slo", serve_cfg=None,

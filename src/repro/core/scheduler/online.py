@@ -86,6 +86,11 @@ class OnlineMicrobatchScheduler:
         self.adaptive = adaptive
         self.calibration = calibration
         self.mode = mode
+        # roster_chips: chips the fleet can actually field right now (None
+        # = single-host, no roster tracking).  Elastic runs shrink it on
+        # host loss so a plan sized for the old fleet is rejected loudly
+        # instead of silently over-subscribing the survivors.
+        self.roster_chips: Optional[int] = None
         self._pool = concurrent.futures.ThreadPoolExecutor(max_workers=1)
         self._pending: Optional[concurrent.futures.Future] = None
 
@@ -94,10 +99,23 @@ class OnlineMicrobatchScheduler:
     def n_buckets(self) -> int:
         return self.plan.n_buckets
 
+    def set_roster(self, n_chips: Optional[int]) -> None:
+        """Update the fleet capacity the scheduler plans against (None
+        disables the check).  The *current* plan is left untouched — the
+        controller's recovery path decides what to run on the survivors;
+        only future `set_plan()` calls validate against the new roster."""
+        self.roster_chips = None if n_chips is None else int(n_chips)
+
     def set_plan(self, plan: ParallelismPlan) -> None:
         """Hot-swap the active plan θ*.  Takes effect on the next
         `schedule()` call — in-flight work keeps the plan it was scheduled
-        under (each call captures `self.plan` once on entry)."""
+        under (each call captures `self.plan` once on entry).  With a
+        roster attached (`set_roster`), a plan needing more chips than the
+        fleet can field is rejected."""
+        if self.roster_chips is not None and plan.chips > self.roster_chips:
+            raise ValueError(
+                f"plan needs {plan.chips} chips but the roster has "
+                f"{self.roster_chips}; re-plan for the surviving fleet")
         self.plan = plan
 
     def item_durations(self, items: Sequence[DataItem],

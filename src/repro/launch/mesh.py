@@ -22,6 +22,19 @@ def compat_make_mesh(shape, axes, devices=None):
     return jax.make_mesh(shape, axes, **kw)
 
 
+def host_groups(devices, per_host: int):
+    """Partition a flat device list into contiguous emulated "hosts" of
+    ``per_host`` devices each (the roster `repro.launch.fleet.FleetManager`
+    owns).  Raises on a ragged split — every host must field the same
+    device count or per-host data shards stop being comparable."""
+    devices = list(devices)
+    if per_host < 1 or len(devices) % per_host:
+        raise ValueError(
+            f"{len(devices)} devices do not split into hosts of {per_host}")
+    return [devices[i:i + per_host]
+            for i in range(0, len(devices), per_host)]
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 single pod (256 chips) or 2x16x16 two-pod (512 chips)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)

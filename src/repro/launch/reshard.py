@@ -318,4 +318,13 @@ class ParamSwapper:
         self.reports.append(report)
         return report
 
+    def refresh(self, plan: ParallelismPlan) -> ReshardReport:
+        """Re-place the *same* logical plan onto whatever mesh
+        ``mesh_factory`` currently resolves — the elastic-recovery
+        primitive: after a host loss, a fleet-backed factory
+        (`FleetManager.plan_mesh`) now maps the plan onto the surviving
+        devices, so ``refresh`` migrates live params off the dead host
+        without a plan change (and without a checkpoint)."""
+        return self.swap(plan, plan)
+
     __call__ = swap

@@ -12,7 +12,11 @@ loop (the paper's "continuously profiles runtime behavior" claim):
 Entry point: ``DFLOPEngine.runtime(gbs)`` returns a wired controller.
 """
 from repro.runtime.calibration import OnlineCalibrator, shape_bucket
-from repro.runtime.controller import ReplanRecord, RuntimeController
+from repro.runtime.controller import (
+    RecoveryRecord,
+    ReplanRecord,
+    RuntimeController,
+)
 from repro.runtime.drift import (
     DriftDetector,
     DriftEvent,
@@ -27,6 +31,7 @@ __all__ = [
     "DriftEvent",
     "OnlineCalibrator",
     "PageHinkley",
+    "RecoveryRecord",
     "ReplanRecord",
     "RollingStat",
     "RuntimeController",

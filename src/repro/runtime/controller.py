@@ -29,6 +29,7 @@ from __future__ import annotations
 
 import concurrent.futures
 import threading
+import time
 from dataclasses import dataclass
 from typing import List, Optional, Sequence
 
@@ -55,6 +56,22 @@ class ReplanRecord:
     reshard: Optional[object] = None  # ReshardReport of the physical swap
 
 
+@dataclass
+class RecoveryRecord:
+    """One checkpoint-free roster recovery (`poll_fleet`): the membership
+    events it coalesced, what plan survived, and how."""
+
+    events: tuple                   # MembershipEvents drained together
+    n_chips: int                    # roster capacity after the events
+    old_plan_tuple: tuple
+    new_plan_tuple: Optional[tuple]  # adopted plan (None = kept the old θ*)
+    adopted: bool                   # a fresh search result was adopted
+    degraded: bool                  # fell back: re-placed/stale old plan
+    elapsed_s: float
+    reshard: Optional[object] = None   # ReshardReport of the migration
+    error: Optional[str] = None        # first search/reshard failure seen
+
+
 class RuntimeController:
     def __init__(self, engine, scheduler: OnlineMicrobatchScheduler,
                  gbs: int, *,
@@ -67,7 +84,8 @@ class RuntimeController:
                  replan_n_trials: int = 8,
                  param_swapper=None,
                  swap_horizon_batches: int = 50,
-                 composer=None):
+                 composer=None,
+                 fleet=None):
         """param_swapper: optional physical-reshard hook (duck-typed to
         `repro.launch.reshard.ParamSwapper`: ``swap(old_plan, new_plan) ->
         ReshardReport`` plus optional ``estimate_cost_s``/``compatible``).
@@ -79,13 +97,26 @@ class RuntimeController:
         composer: optional `repro.data.composer.LookaheadComposer`.  The
         controller wires its telemetry (compose spans + counters land in
         this trace/metrics) and flushes its cached window durations on
-        every plan hot-swap, so composition never targets a stale θ*."""
+        every plan hot-swap, so composition never targets a stale θ*.
+
+        fleet: optional `repro.launch.fleet.FleetManager`.  `poll_fleet()`
+        (called from `schedule()` at every batch boundary; physically-
+        backed pipelined loops call it alongside `maybe_swap()`) drains
+        its membership events and runs checkpoint-free recovery: re-plan
+        for the new roster, migrate live params through `param_swapper`,
+        degrade to the surviving roster when either fails (docs/fleet.md).
+        Background re-plans are additionally gated on roster capacity so
+        a search raced by a host loss can never adopt an over-sized plan."""
         self.engine = engine
         self.scheduler = scheduler
         self.gbs = gbs
         self.param_swapper = param_swapper
         self.swap_horizon_batches = swap_horizon_batches
         self.composer = composer
+        self.fleet = fleet
+        self.recoveries: List[RecoveryRecord] = []
+        if fleet is not None:
+            scheduler.set_roster(fleet.n_chips)
         self._pending_items: Optional[list] = None
         self.trace = trace if trace is not None else TraceRecorder(enabled=False)
         self.metrics = metrics if metrics is not None else RuntimeMetrics()
@@ -118,6 +149,7 @@ class RuntimeController:
 
     def schedule(self, items: Sequence[DataItem]) -> ScheduleOutput:
         """Schedule one global batch through the control loop."""
+        self.poll_fleet()                   # roster changes outrank re-plans
         self.maybe_swap()                   # adopt a finished re-plan first
         with self.trace.span("schedule", cat="scheduler",
                              batch=self.batch_idx, n_items=len(items)):
@@ -320,6 +352,16 @@ class RuntimeController:
         gated: Optional[str] = None
         report = None
         old_plan = self.scheduler.plan
+        roster = getattr(self.scheduler, "roster_chips", None)
+        if swapped and roster is not None and res.plan.chips > roster:
+            # the background search raced a roster shrink: its plan was
+            # sized for the pre-failure fleet and cannot be fielded now
+            swapped = False
+            gated = "roster"
+            self.trace.instant("swap-gated", cat="replan",
+                               args={"reason": gated,
+                                     "plan_chips": res.plan.chips,
+                                     "roster_chips": roster})
         if swapped and self.param_swapper is not None:
             gated = self._physical_gate(old_plan, res.plan, stale, new_mk)
             if gated is None:
@@ -396,6 +438,114 @@ class RuntimeController:
         if gain <= cost:
             return "amortization"
         return None
+
+    # ------------------------------------------------------------------ #
+    def poll_fleet(self) -> List[RecoveryRecord]:
+        """Drain fleet membership events and recover (batch boundary).
+
+        Events queued since the last poll are coalesced into ONE recovery
+        — a simultaneous fail+fail (or a fail raced by a join) re-plans
+        once, for the roster that results.  No fleet or no events: no-op.
+        Physically-backed pipelined loops must call this at a true step
+        boundary, same contract as `maybe_swap()`."""
+        if self.fleet is None:
+            return []
+        events = self.fleet.poll_events()
+        if not events:
+            return []
+        for ev in events:
+            self.metrics.record_membership(ev.kind)
+            self.trace.instant(f"fleet:{ev.kind}", cat="fleet",
+                               args={"host": ev.host_id, "step": ev.step,
+                                     "n_alive_after": ev.n_alive_after})
+        rec = self._recover_roster(tuple(events))
+        self.recoveries.append(rec)
+        self.metrics.record_recovery(rec.elapsed_s, degraded=rec.degraded)
+        self.trace.counter("fleet_chips", rec.n_chips)
+        return [rec]
+
+    def _recover_roster(self, events: tuple) -> RecoveryRecord:
+        """Checkpoint-free recovery onto the current roster.
+
+        Fallback chain — degrade, never crash: (1) re-plan for the new
+        roster's chip count and migrate the live params to the winner;
+        (2) if the search fails, finds nothing, or its plan can't be
+        fielded/reshard, *re-place* the old plan onto the survivors
+        (`ParamSwapper.refresh` through the fleet mesh factory); (3) if
+        even re-placement fails, continue on the stale layout.  The only
+        raise is a swapper marked ``damaged`` — donated buffers are gone
+        and there is nothing left to train on."""
+        t0 = time.monotonic()
+        old_plan = self.scheduler.plan
+        n_chips = self.fleet.n_chips
+        self.scheduler.set_roster(n_chips)
+        error: Optional[str] = None
+        res = None
+        with self.trace.span("fleet-recovery", cat="fleet",
+                             n_chips=n_chips, n_events=len(events)):
+            dist = self.drift.window_distribution()
+            if len(dist) == 0:
+                dist = self.engine.dist
+            try:
+                opt = ParallelismOptimizer(
+                    self.fleet.cluster_spec(self.engine.cluster),
+                    self.engine.perf, mode=self.engine.mode,
+                    objective=self._objective(),
+                    calibrator=self.calibration, seed=self.batch_idx)
+                res = opt.search(dist, self.gbs)
+            except Exception as e:  # noqa: BLE001 — an infeasible search
+                # degrades to the surviving roster, never crashes the loop
+                error = f"{type(e).__name__}: {e}"
+            candidate = (res.plan if res is not None and res.found
+                         and res.plan.chips <= n_chips else None)
+            if (candidate is not None
+                    and candidate.as_tuple() == old_plan.as_tuple()):
+                candidate = None      # same θ — a re-placement, not a swap
+            target = candidate if candidate is not None else old_plan
+            report = None
+            if self.param_swapper is not None:
+                attempts = ([old_plan] if target is old_plan
+                            else [target, old_plan])
+                for attempt in attempts:
+                    t_us = self.trace.now_us()
+                    try:
+                        if attempt is old_plan:
+                            report = self.param_swapper.refresh(old_plan)
+                        else:
+                            report = self.param_swapper.swap(old_plan,
+                                                             attempt)
+                        target = attempt
+                        self.trace.complete(
+                            "fleet-reshard", t_us,
+                            self.trace.now_us() - t_us, cat="fleet",
+                            args={"old": list(old_plan.as_tuple()),
+                                  "new": list(attempt.as_tuple())})
+                        self.metrics.record_reshard(report.elapsed_s)
+                        break
+                    except Exception as e:  # noqa: BLE001 — fall through
+                        # the chain; stale layout is the last resort
+                        self.trace.instant(
+                            "fleet-reshard-error", cat="fleet",
+                            args={"error": f"{type(e).__name__}: {e}"})
+                        if getattr(self.param_swapper, "damaged", False):
+                            raise
+                        error = error or f"{type(e).__name__}: {e}"
+                        target = old_plan
+        adopted = target is not old_plan
+        if adopted:
+            self.scheduler.set_plan(target)
+            self.engine.plan_result = res
+            if self.composer is not None:
+                self.composer.flush_plan()
+        degraded = not adopted and (n_chips < old_plan.chips
+                                    or error is not None)
+        return RecoveryRecord(
+            events=events, n_chips=n_chips,
+            old_plan_tuple=old_plan.as_tuple(),
+            new_plan_tuple=target.as_tuple() if adopted else None,
+            adopted=adopted, degraded=degraded,
+            elapsed_s=time.monotonic() - t0,
+            reshard=report, error=error)
 
     def drain(self, timeout: Optional[float] = None) -> bool:
         """Block until any in-flight search finishes, then try to swap.

@@ -82,6 +82,15 @@ class RuntimeMetrics:
         self.n_replans = 0
         self.n_drift_events = 0
         self.n_physical_swaps = 0
+        # -- fleet membership (repro.launch.fleet) ---------------------- #
+        self.n_host_joins = 0
+        self.n_host_leaves = 0          # graceful leaves + failures
+        self.n_host_failures = 0
+        self.n_recoveries = 0           # checkpoint-free roster recoveries
+        self.n_degraded = 0             # recoveries that fell back to the
+        #                                 stale/re-placed plan (no better
+        #                                 plan adoptable on the survivors)
+        self.recovery_s = RollingStat(window)
         self.n_composed = 0
         self.n_forced_items = 0
         self.n_truncated_tokens = 0
@@ -130,6 +139,27 @@ class RuntimeMetrics:
         """One physical param re-layout (plan hot-swap's device half)."""
         self.reshard_s.add(elapsed_s)
         self.n_physical_swaps += 1
+
+    def record_membership(self, kind: str) -> None:
+        """One fleet roster transition ("join" | "leave" | "fail")."""
+        if kind == "join":
+            self.n_host_joins += 1
+        elif kind == "leave":
+            self.n_host_leaves += 1
+        elif kind == "fail":
+            self.n_host_leaves += 1
+            self.n_host_failures += 1
+        else:
+            raise ValueError(f"unknown membership kind {kind!r}")
+
+    def record_recovery(self, elapsed_s: float, *,
+                        degraded: bool = False) -> None:
+        """One checkpoint-free roster recovery (re-plan + reshard onto the
+        new roster).  ``degraded``: the controller fell back to the stale
+        or re-placed plan instead of adopting a fresh search result."""
+        self.recovery_s.add(elapsed_s)
+        self.n_recoveries += 1
+        self.n_degraded += bool(degraded)
 
     def record_compose(self, stats) -> None:
         """`stats`: a `repro.data.composer.ComposeStats` (duck-typed to
@@ -206,6 +236,14 @@ class RuntimeMetrics:
                                   for p, s in sorted(self.stage_util.items())},
             "pred_error": {m: _n(s.mean())
                            for m, s in sorted(self.pred_error.items())},
+            "fleet": {
+                "n_host_joins": self.n_host_joins,
+                "n_host_leaves": self.n_host_leaves,
+                "n_host_failures": self.n_host_failures,
+                "n_recoveries": self.n_recoveries,
+                "n_degraded": self.n_degraded,
+                "recovery_mean_s": _n(self.recovery_s.mean()),
+            },
             "serve": {
                 "n_requests": self.n_requests,
                 "n_admitted": self.n_admitted,

@@ -8,7 +8,7 @@ numbers, not the full row dumps) to committed JSON files at the repo root:
 
   * ``BENCH_train.json``   — fig16 (drift re-plan recovery), fig17
     (objective sweep), fig18 (lookahead composer), fig20 (schedule-family
-    search);
+    search), fig21 (elastic host-loss recovery vs naive stall);
   * ``BENCH_serving.json`` — fig19 (data-aware serving goodput/p99).
 
 Run from the repo root (about a minute of wall clock):
@@ -49,6 +49,7 @@ SNAPSHOTS = {
                    "n_eval": 8}),
         "fig18": ("benchmarks.fig18_composer", {"n_batches": 48}),
         "fig20": ("benchmarks.fig20_schedules", {"n_iters": 4}),
+        "fig21": ("benchmarks.fig21_elastic", {"recovery_wall_s": 0.05}),
     },
     "BENCH_serving.json": {
         "fig19": ("benchmarks.fig19_serving", {}),

@@ -39,6 +39,7 @@ REQUIRED = [
     "docs/resharding.md",
     "docs/data.md",
     "docs/serving.md",
+    "docs/fleet.md",
     "benchmarks/README.md",
 ]
 
@@ -49,7 +50,9 @@ DOCTEST_MODULES = [
     "repro.core.optimizer.makespan",
     "repro.core.optimizer.space",
     "repro.launch.reshard",
+    "repro.launch.fleet",
     "repro.data.composer",
+    "repro.data.host_shard",
     "repro.serve.request",
     "repro.serve.admission",
     "repro.serve.engine",
