@@ -35,6 +35,24 @@ def host_groups(devices, per_host: int):
             for i in range(0, len(devices), per_host)]
 
 
+def serve_device_pools(n_prefill: int, n_decode: int, devices=None):
+    """Assign the serving engine's worker pools to devices (DistTrain-style
+    prefill/decode disaggregation).  With enough devices the pools are
+    disjoint — the KV handoff is then a genuine device-to-device transfer
+    (on an emulated fleet via ``--xla_force_host_platform_device_count``).
+    Fewer devices wrap round-robin, degrading gracefully to same-device
+    copies on a single-chip host."""
+    devs = list(devices if devices is not None else jax.devices())
+    if n_prefill < 1 or n_decode < 1:
+        raise ValueError("both pools need at least one worker")
+    total = n_prefill + n_decode
+    if len(devs) >= total:
+        return devs[:n_prefill], devs[n_prefill:total]
+    pre = [devs[i % len(devs)] for i in range(n_prefill)]
+    dec = [devs[(n_prefill + i) % len(devs)] for i in range(n_decode)]
+    return pre, dec
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 single pod (256 chips) or 2x16x16 two-pod (512 chips)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)

@@ -308,6 +308,19 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
     }
 
 
+def kv_cache_bytes(cfg: ModelConfig, seq_len: int,
+                   bytes_per_value: int = 2) -> float:
+    """Bytes of live KV state for one request at context ``seq_len``
+    (K + V across all layers) — the payload a prefill→decode handoff
+    moves, priced by the serving loop as bytes/bandwidth + latency.
+    Lives next to `init_cache` so the transfer cost model and the cache
+    layout can never drift apart."""
+    kv_heads = cfg.n_kv_heads or cfg.n_heads or 1
+    head_dim = cfg.head_dim or (cfg.d_model // max(cfg.n_heads, 1))
+    return 2.0 * cfg.n_layers * kv_heads * head_dim \
+        * bytes_per_value * seq_len
+
+
 def cache_write(cache, k_new, v_new, pos):
     """Write one token (k_new: (B,1,Kh,D)) at each row's ring slot
     ``pos % C``.  ``pos``: scalar (all rows in lockstep) or ``(B,)``

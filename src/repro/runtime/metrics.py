@@ -110,6 +110,8 @@ class RuntimeMetrics:
         self.n_completed = 0
         self.n_slo_met = 0
         self.n_serve_compiles = 0
+        self.n_preemptions = 0          # decode-slot evictions (SLO rescue)
+        self.n_prefill_chunks = 0       # chunk events from chunked prefill
 
     # ------------------------------------------------------------------ #
     def record_schedule(self, out) -> None:
@@ -253,6 +255,8 @@ class RuntimeMetrics:
                 "n_completed": self.n_completed,
                 "n_slo_met": self.n_slo_met,
                 "n_serve_compiles": self.n_serve_compiles,
+                "n_preemptions": self.n_preemptions,
+                "n_prefill_chunks": self.n_prefill_chunks,
                 "queue_depth_mean": _n(self.queue_depth.mean()),
                 "batch_occupancy_mean": _n(self.batch_occupancy.mean()),
                 "prefill_batch_mean_s": _n(self.prefill_batch_s.mean()),

@@ -1,14 +1,29 @@
 from repro.serve.admission import FIFOAdmission, PrefillPricer, SLOAdmission
+from repro.serve.backend import (DecodeOutcome, EmulatedBackend,
+                                 ExecutionBackend, PrefillOutcome)
 from repro.serve.engine import ServeConfig, ServeEngine, ServeReport
 from repro.serve.request import Request, RequestQueue
-from repro.serve.steps import (clear_cache_row, greedy_generate,
-                               make_decode_step, make_prefill_step,
-                               merge_cache_row, prefill_into_cache)
+from repro.serve.steps import (clear_cache_row, extract_cache_row,
+                               greedy_generate, make_decode_step,
+                               make_prefill_step, merge_cache_row,
+                               pow2_chunks, prefill_into_cache,
+                               prefill_into_cache_chunked)
 
 __all__ = [
     "FIFOAdmission", "PrefillPricer", "SLOAdmission",
+    "DecodeOutcome", "EmulatedBackend", "ExecutionBackend", "PrefillOutcome",
     "ServeConfig", "ServeEngine", "ServeReport",
     "Request", "RequestQueue",
-    "clear_cache_row", "greedy_generate", "make_decode_step",
-    "make_prefill_step", "merge_cache_row", "prefill_into_cache",
+    "clear_cache_row", "extract_cache_row", "greedy_generate",
+    "make_decode_step", "make_prefill_step", "merge_cache_row",
+    "pow2_chunks", "prefill_into_cache", "prefill_into_cache_chunked",
 ]
+
+
+def __getattr__(name):
+    # RealBackend imports jax device plumbing; keep it lazy so the
+    # emulation-only path stays importable without touching device state
+    if name == "RealBackend":
+        from repro.serve.real import RealBackend
+        return RealBackend
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

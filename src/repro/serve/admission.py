@@ -64,6 +64,7 @@ class PrefillPricer:
         self._base: Dict[Tuple[int, int], Tuple[float, float, int]] = {}
         self._lpad: Dict[int, float] = {}
         self._price: Dict[Tuple[int, int], float] = {}
+        self._decode_fit: Dict[int, float] = {}   # pow2 ctx bucket -> ratio
         self.n_flushes = 0
         # decode FLOPs are affine in the cache length (one token against a
         # kv of c): fit fl(c) = fl0 + fl1*c from two exact evaluations
@@ -118,10 +119,29 @@ class PrefillPricer:
         return self.price(req) + self.pad_extra(req, s_pad)
 
     # ------------------------------------------------------------------ #
-    def decode_tok_s(self, cache_len: float) -> float:
-        """Predicted one-token decode step cost at context `cache_len`."""
+    def decode_tok_base_s(self, cache_len: float) -> float:
+        """Raw perf-model one-token decode cost at context `cache_len`
+        (affine FLOPs fit / achievable throughput) — calibration-free."""
         fl = self._fl0 + self._fl1 * max(cache_len, 1.0)
         return fl / self.perf.llm.thr_all(max(cache_len, 1.0), self.tp)
+
+    def decode_tok_s(self, cache_len: float) -> float:
+        """Predicted one-token decode step cost at context `cache_len`:
+        the raw fit refined by the calibrator's "decode" cells.  The
+        per-pow2-context-bucket ratio is memoized (`_decode_fit`) exactly
+        like prefill prices — stale until ``flush()`` — so a drift fire
+        re-estimates *both* halves of the serving cost model.  Without
+        decode observations (the emulation never feeds any) the ratio is
+        identically 1.0 and this is bit-equal to the raw fit."""
+        base = self.decode_tok_base_s(cache_len)
+        if self.calibrator is None:
+            return base
+        b = _pow2(int(max(cache_len, 1.0)))
+        ratio = self._decode_fit.get(b)
+        if ratio is None:
+            ratio = self._decode_fit[b] = self.calibrator.correct(
+                "decode", float(b), self.tp, 1.0)
+        return base * ratio
 
     def decode_estimate(self, req: Request) -> float:
         """Expected total decode time: max_new steps at the mean context."""
@@ -130,9 +150,13 @@ class PrefillPricer:
         return req.max_new_tokens * self.decode_tok_s(mid)
 
     def flush(self) -> None:
-        """Drop memoized *prices* (drift-triggered re-estimation).  Base
+        """Drop memoized *prices* — prefill prices AND decode-step
+        token-cost fits — so both are re-estimated under the post-drift
+        calibration (a drift fire that re-priced prefill but kept stale
+        decode fits would mis-score every decode_estimate).  Base
         durations are calibration-free and stay cached."""
         self._price.clear()
+        self._decode_fit.clear()
         self.n_flushes += 1
 
 

@@ -1,5 +1,5 @@
-"""Data-aware serving engine: admission → prefill pool → KV handoff →
-continuous-batch decode pool, as a deterministic discrete-event emulation.
+"""Data-aware serving loop: admission → prefill pool → KV handoff →
+continuous-batch decode pool, backend-agnostic.
 
 DFLOP's training loop (profile → plan → schedule → observe → re-plan)
 maps onto inference as:
@@ -14,24 +14,39 @@ maps onto inference as:
     `OnlineCalibrator` with (predicted base, actual) and the residual
     stream into a `PageHinkley` drift test;
   * **re-plan**  — a drift event flushes the pricer's memoized admission
-    prices so they are re-estimated under the post-drift calibration.
+    prices (prefill *and* decode fits) so they are re-estimated under
+    the post-drift calibration.
+
+The loop owns virtual time, SLO accounting and every policy decision;
+*execution physics* live behind a pluggable `ExecutionBackend`
+(`repro.serve.backend`): `EmulatedBackend` replays PR 6's discrete-event
+model bit-identically (oracle ``true_factor`` durations, numpy + heapq,
+no wall clock), while `RealBackend` (`repro.serve.real`) runs jit'd
+prefill/decode steps on an emulated device fleet and feeds *measured*
+wall-clock durations through the same calibrator/drift/re-price path.
+Real execution is eager — the backend runs each batch when the loop
+admits it and the measured duration is replayed on the virtual clock —
+so both backends share one event loop and one telemetry surface.
 
 Disaggregation follows DistTrain's phase split: prefill and decode run on
-*separate* emulated worker pools with an explicit KV-handoff step priced
-as bytes/bandwidth + latency.  Decode is continuously batched — requests
+*separate* worker pools with an explicit KV-handoff step (priced as
+bytes/bandwidth + latency when emulated; an actual device-to-device
+cache transfer when real).  Decode is continuously batched — requests
 join and leave a worker's batch only at step boundaries, and the batch is
-padded to a power-of-two occupancy so a real jit cache would see a
-bounded set of shapes (each novel (pool, bucket) pays ``compile_s``, same
-convention as the composer's recompile penalty).
+padded to a power-of-two occupancy so the jit cache sees a bounded set of
+shapes (each novel (pool, bucket) pays a compile).
 
-Ground truth comes from each request's ``true_factor`` (drawn by the load
-generator: per-modality bias × lognormal noise): actual durations are
-predicted *base* durations scaled by it, plus deterministic padding
-overhead.  Identical request streams therefore produce bit-identical
-ground truth under any admission policy — the fig19 A/B is exact.
+Two loop-level policies only make sense against a backend boundary:
 
-Virtual time is seconds; nothing here touches a wall clock, so runs are
-reproducible and fast (numpy + heapq only).
+  * **chunked prefill** — a backend may split a batch into chunks
+    (`PrefillOutcome.chunks`); the loop schedules each chunk as its own
+    event, so decode steps interleave with a long prompt's prefill
+    instead of stalling behind it;
+  * **decode-slot preemption** (``preempt_slack_s``) — at a step
+    boundary, if a ready request's SLO slack is below the threshold and
+    the worker is full, the active request with the most slack is parked
+    (``release(park=True)``; the backend preserves its generation state)
+    and the urgent request takes the slot.
 
 >>> ServeConfig(decode_slots=8).decode_slots
 8
@@ -46,13 +61,15 @@ import numpy as np
 
 from repro.data.composer import _pow2
 from repro.serve.admission import FIFOAdmission, PrefillPricer, SLOAdmission
+from repro.serve.backend import (EmulatedBackend, ExecutionBackend,
+                                 PrefillOutcome)
 from repro.serve.request import (DECODING, DONE, HANDOFF, PREFILLING,
                                  Request, RequestQueue)
 
 
 @dataclass(frozen=True)
 class ServeConfig:
-    """Emulated serving cluster + engine knobs."""
+    """Serving cluster + engine knobs (shared by both backends)."""
 
     n_prefill_workers: int = 2
     n_decode_workers: int = 2
@@ -63,6 +80,10 @@ class ServeConfig:
     kv_bandwidth_gbps: float = 64.0  # prefill → decode interconnect
     kv_latency_s: float = 0.002
     kv_bytes_per_value: int = 2      # bf16 KV cache
+    # decode-slot preemption for SLO rescue: a ready request whose slack
+    # drops below this threshold may evict the slack-richest active row
+    # at a step boundary.  None disables (the PR 6 behavior).
+    preempt_slack_s: Optional[float] = None
 
 
 @dataclass
@@ -107,17 +128,22 @@ class ServeEngine:
     """Event-driven admission/batching loop over a live request stream."""
 
     def __init__(self, pricer: PrefillPricer, cfg: ServeConfig = ServeConfig(),
-                 *, admission=None, calibrator=None, drift=None,
+                 *, backend: Optional[ExecutionBackend] = None,
+                 admission=None, calibrator=None, drift=None,
                  trace=None, metrics=None):
-        """``admission``: policy with ``select(pending, now_s, max_batch)``
+        """``backend``: the `ExecutionBackend` executing (or emulating)
+        prefill/handoff/decode; default `EmulatedBackend` over ``pricer``.
+        ``admission``: policy with ``select(pending, now_s, max_batch)``
         and ``note_batch(duration_s)`` (default: `SLOAdmission` around
         ``pricer``).  ``calibrator``/``drift``/``trace``/``metrics`` are
         the runtime-layer hooks (`OnlineCalibrator`, `PageHinkley`,
         `TraceRecorder`, `RuntimeMetrics`); any may be None."""
         self.pricer = pricer
         self.cfg = cfg
+        self.backend = backend if backend is not None \
+            else EmulatedBackend(pricer, cfg)
         self.admission = admission if admission is not None \
-            else SLOAdmission(pricer, handoff_s=self._handoff_s_mean())
+            else SLOAdmission(pricer, handoff_s=self.backend.handoff_s_mean())
         self.calibrator = calibrator
         self.drift = drift
         self.trace = trace
@@ -125,36 +151,31 @@ class ServeEngine:
         self.queue = RequestQueue()
         self.n_drift_events = 0
         self.n_compiles = 0
+        self.n_preemptions = 0
+        #: (module, corrected prediction, actual) per observation — the
+        #: whole run, unlike the metrics' rolling window (fig22 compares
+        #: early- vs late-run error to show calibration converging).
+        self.prediction_log: List[Tuple[str, float, float]] = []
         self._prefill_busy = [False] * cfg.n_prefill_workers
         self._decode = [_DecodeWorker(i) for i in range(cfg.n_decode_workers)]
         self._ready: List[Request] = []    # handoff done, awaiting a slot
-        self._seen_prefill_shapes: set = set()
-        self._seen_decode_shapes: set = set()
         self._completed: List[Request] = []
         self._heap: List[tuple] = []
         self._seq = 0                      # heap tie-break, keeps FIFO order
 
     # ------------------------------------------------------------------ #
-    def _kv_bytes(self, seq_len: int) -> float:
-        c = self.pricer.perf.llm.cfg
-        kv_heads = c.n_kv_heads or c.n_heads or 1
-        head_dim = c.head_dim or (c.d_model // max(c.n_heads, 1))
-        return 2.0 * c.n_layers * kv_heads * head_dim \
-            * self.cfg.kv_bytes_per_value * seq_len
-
     def _handoff_s(self, req: Request) -> float:
-        _, _, s = self.pricer.base(req)
-        return (self._kv_bytes(s) / (self.cfg.kv_bandwidth_gbps * 1e9)
-                + self.cfg.kv_latency_s)
-
-    def _handoff_s_mean(self) -> float:
-        """Rough per-request handoff estimate for admission slack."""
-        return self._kv_bytes(1024) / (self.cfg.kv_bandwidth_gbps * 1e9) \
-            + self.cfg.kv_latency_s
+        return self.backend.handoff(req)
 
     def _push(self, t: float, kind: str, payload=None) -> None:
         heapq.heappush(self._heap, (t, self._seq, kind, payload))
         self._seq += 1
+
+    def _note_compiles(self, n_new: int) -> None:
+        if n_new:
+            self.n_compiles += n_new
+            if self.metrics is not None:
+                self.metrics.n_serve_compiles += n_new
 
     # ------------------------------------------------------------------ #
     def run(self, requests: Sequence[Request]) -> ServeReport:
@@ -168,6 +189,8 @@ class ServeEngine:
             if kind == "arrival":
                 self.queue.push(payload)
                 self._try_admit(t)
+            elif kind == "prefill_chunk":
+                self._on_prefill_chunk(t, *payload)
             elif kind == "prefill_done":
                 self._on_prefill_done(t, *payload)
             elif kind == "handoff_done":
@@ -189,19 +212,12 @@ class ServeEngine:
             depth = self.queue.depth
             self.queue.pop(batch)
             s_pad = _pow2(max(self.pricer.base(r)[2] for r in batch))
-            dur = 0.0
             for r in batch:
                 r.status = PREFILLING
                 r.admit_s = t
-                base, _, _ = self.pricer.base(r)
-                dur += base * r.true_factor + self.pricer.pad_extra(r, s_pad)
-            key = (_pow2(len(batch)), s_pad)
-            if key not in self._seen_prefill_shapes:
-                self._seen_prefill_shapes.add(key)
-                dur += self.cfg.compile_s
-                self.n_compiles += 1
-                if self.metrics is not None:
-                    self.metrics.n_serve_compiles += 1
+            out = self.backend.prefill(w, batch, s_pad)
+            dur = out.duration_s
+            self._note_compiles(out.n_new_shapes)
             self._prefill_busy[w] = True
             self.admission.note_batch(dur)
             if self.metrics is not None:
@@ -212,26 +228,49 @@ class ServeEngine:
                                     args={"batch": len(batch),
                                           "s_pad": s_pad, "queue": depth})
                 self.trace.counter("serve_queue_depth", depth - len(batch))
-            self._push(t + dur, "prefill_done", (w, batch))
+            if len(out.chunks) > 1:
+                # chunked prefill: each chunk is its own event, so decode
+                # steps interleave with a long prompt on the virtual clock
+                self._push(t + out.chunks[0], "prefill_chunk",
+                           (w, batch, out, 0))
+            else:
+                self._push(t + dur, "prefill_done", (w, batch, out))
 
-    def _on_prefill_done(self, t: float, w: int, batch: List[Request]) -> None:
+    def _on_prefill_chunk(self, t: float, w: int, batch: List[Request],
+                          out: PrefillOutcome, i: int) -> None:
+        if self.metrics is not None:
+            self.metrics.n_prefill_chunks += 1
+        if self.trace is not None:
+            self.trace.complete("prefill_chunk", (t - out.chunks[i]) * 1e6,
+                                out.chunks[i] * 1e6, cat="serve",
+                                tid=100 + w, args={"chunk": i,
+                                                   "of": len(out.chunks)})
+        if i + 1 < len(out.chunks):
+            self._push(t + out.chunks[i + 1], "prefill_chunk",
+                       (w, batch, out, i + 1))
+        else:
+            self._on_prefill_done(t, w, batch, out)
+
+    def _on_prefill_done(self, t: float, w: int, batch: List[Request],
+                         out: PrefillOutcome) -> None:
         self._prefill_busy[w] = False
-        for r in batch:
+        for r, actual in zip(batch, out.per_request_actual):
             r.status = HANDOFF
             r.prefill_done_s = t
-            self._observe(r)
+            self._observe(r, actual)
             if self.metrics is not None:
                 self.metrics.n_handoffs += 1
-            self._push(t + self._handoff_s(r), "handoff_done", r)
+            self._push(t + self.backend.handoff(r), "handoff_done", r)
         self._try_admit(t)
 
-    def _observe(self, r: Request) -> None:
+    def _observe(self, r: Request, actual: float) -> None:
         """observe → (maybe) re-estimate: calibration learns the residual
         heterogeneity the perf model can't see; Page–Hinkley watches the
         post-calibration residual stream and a fire flushes the memoized
-        admission prices (re-priced under the new calibration)."""
+        admission prices (re-priced under the new calibration).
+        ``actual`` comes from the backend: oracle-scaled base (emulated)
+        or a measured wall-clock share (real)."""
         base, _, s = self.pricer.base(r)
-        actual = base * r.true_factor
         if self.calibrator is not None:
             corrected = self.calibrator.correct("prefill", s,
                                                 self.pricer.tp, base)
@@ -239,6 +278,7 @@ class ServeEngine:
                                     actual)
         else:
             corrected = base
+        self.prediction_log.append(("prefill", corrected, actual))
         if self.metrics is not None:
             self.metrics.record_prediction("prefill", corrected, actual)
         if self.drift is not None:
@@ -264,31 +304,61 @@ class ServeEngine:
                 dw.busy = True
                 self._push(t, "decode_step", dw.idx)
 
+    def _decode_slack_s(self, r: Request, t: float) -> float:
+        """SLO slack if the request decoded its remaining budget now."""
+        _, _, s = self.pricer.base(r)
+        rem = (r.max_new_tokens - r.tokens_done) \
+            * self.pricer.decode_tok_s(s + r.tokens_done)
+        return r.deadline_s - t - rem
+
+    def _maybe_preempt(self, t: float, dw: _DecodeWorker) -> None:
+        """SLO rescue at a step boundary: park the slack-richest active
+        row for a ready request about to miss its deadline.  The backend
+        preserves the victim's generation state (``park=True``); it
+        re-joins through the normal ready queue."""
+        if (self.cfg.preempt_slack_s is None or not self._ready
+                or len(dw.active) < self.cfg.decode_slots):
+            return
+        urgent = min(self._ready, key=lambda r: self._decode_slack_s(r, t))
+        u_slack = self._decode_slack_s(urgent, t)
+        if u_slack > self.cfg.preempt_slack_s:
+            return
+        victim = max(dw.active, key=lambda r: self._decode_slack_s(r, t))
+        # only evict a row that is comfortably safer than the threshold —
+        # equal-slack swaps would ping-pong without rescuing anyone
+        if self._decode_slack_s(victim, t) <= max(u_slack,
+                                                  self.cfg.preempt_slack_s):
+            return
+        dw.active.remove(victim)
+        self.backend.release(dw.idx, victim, park=True)
+        victim.n_preempted += 1
+        self._ready.append(victim)
+        self._ready.remove(urgent)
+        self._ready.insert(0, urgent)      # urgent takes the freed slot
+        self.n_preemptions += 1
+        if self.metrics is not None:
+            self.metrics.n_preemptions += 1
+        if self.trace is not None:
+            self.trace.instant("decode_preempt", cat="serve",
+                               args={"worker": dw.idx})
+
     def _decode_step(self, t: float, idx: int) -> None:
         dw = self._decode[idx]
         # join/leave ONLY here — a step boundary of this worker
+        self._maybe_preempt(t, dw)
         while self._ready and len(dw.active) < self.cfg.decode_slots:
             r = self._ready.pop(0)
             r.decode_worker = idx
             dw.active.append(r)
+            self.backend.join(idx, r)
         if not dw.active:
             dw.busy = False
             return
+        out = self.backend.decode_step(idx, dw.active)
+        dur = out.duration_s
+        self._note_compiles(out.n_new_shapes)
         n = len(dw.active)
-        pad = _pow2(n) / n                 # pow2-bucketed batch occupancy
-        dur = 0.0
-        for r in dw.active:
-            _, _, s = self.pricer.base(r)
-            c = s + r.tokens_done
-            dur += self.pricer.decode_tok_s(c) * r.true_factor
-        dur *= pad
-        key = _pow2(n)
-        if key not in self._seen_decode_shapes:
-            self._seen_decode_shapes.add(key)
-            dur += self.cfg.compile_s
-            self.n_compiles += 1
-            if self.metrics is not None:
-                self.metrics.n_serve_compiles += 1
+        self._observe_decode(dw, dur)
         end = t + dur
         finished = []
         for r in dw.active:
@@ -302,6 +372,7 @@ class ServeEngine:
         if finished:
             dw.active = [r for r in dw.active if r.status != DONE]
             for r in finished:
+                self.backend.release(idx, r)
                 self._completed.append(r)
                 if self.metrics is not None:
                     self.metrics.record_completion(r.latency_s, r.ttft_s,
@@ -315,6 +386,36 @@ class ServeEngine:
             self.trace.counter("serve_occupancy",
                                n / self.cfg.decode_slots)
         self._push(end, "decode_step", idx)
+
+    def _observe_decode(self, dw: _DecodeWorker, dur: float) -> None:
+        """Feed a *measured* decode-step duration into the calibrator's
+        "decode" cells (apportioned over rows by their raw predicted
+        share).  Only backends that measure (``observes_decode``) feed
+        this — observing the emulation's own oracle would be circular."""
+        if not self.backend.observes_decode or dur <= 0:
+            return
+        rows = []
+        corrected = 0.0
+        raw_tot = 0.0
+        for r in dw.active:
+            _, _, s = self.pricer.base(r)
+            c = s + r.tokens_done
+            shape = float(_pow2(int(c)))
+            raw = self.pricer.decode_tok_base_s(c)
+            if self.calibrator is not None:
+                corrected += self.calibrator.correct("decode", shape,
+                                                     self.pricer.tp, raw)
+            else:
+                corrected += raw
+            rows.append((shape, raw))
+            raw_tot += raw
+        if self.calibrator is not None and raw_tot > 0:
+            for shape, raw in rows:
+                self.calibrator.observe("decode", shape, self.pricer.tp,
+                                        raw, dur * raw / raw_tot)
+        self.prediction_log.append(("decode", corrected, dur))
+        if self.metrics is not None:
+            self.metrics.record_prediction("decode", corrected, dur)
 
     # ------------------------------------------------------------------ #
     def _report(self, requests: Sequence[Request]) -> ServeReport:

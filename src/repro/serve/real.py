@@ -1,0 +1,373 @@
+"""Real execution backend: the serving loop drives the jit'd executor.
+
+`EmulatedBackend` prices the serving physics from the perf model;
+`RealBackend` *runs* them on a jax model and reports measured wall-clock
+durations, closing the ROADMAP's "serving: from emulation to the real
+executor" loop — the measurements feed the same calibrator → Page–
+Hinkley → re-price path fig19 exercises with oracle durations (fig22
+does it against silicon).
+
+Execution substrate (all from `repro.serve.steps`):
+
+  * **prefill** — per-request, at the prompt's exact length, chunked via
+    `pow2_chunks` + `prefill_into_cache_chunked`: every chunk is a jitted
+    `lax.scan` of `decode_step`, so the handoff is numerically the same
+    path decode continues on (token-identical to a solo run);
+  * **handoff** — `jax.device_put` of the request's B=1 cache pytree from
+    its prefill worker's device to a decode worker's device
+    (disaggregated pools via `repro.launch.mesh.serve_device_pools`; on
+    an emulated fleet each worker owns a forced host device);
+  * **decode** — per-worker continuous batch at ``decode_slots`` rows,
+    occupied rows compacted to a prefix and the step jitted per pow2
+    occupancy bucket (the same buckets `SLOAdmission` reasons about);
+    `merge_cache_row`/`clear_cache_row`/`extract_cache_row` implement
+    join, leave and preemption-park.
+
+Shape discipline: prefill compiles ≤ 1 + log2(chunk) chunk shapes,
+decode ≤ log2(slots) + 1 occupancy buckets per device — ``warmup()``
+pre-compiles the whole set so measured durations never include compile
+time.  ``probe()`` seeds the calibrator's "prefill"/"decode" cells with
+a few measured shapes (the perf model predicts accelerator-seconds, the
+host executes wall-seconds; without a probe the first admission rounds
+price in the wrong unit system by orders of magnitude).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.composer import _pow2
+from repro.launch.mesh import serve_device_pools
+from repro.models import model as model_lib
+from repro.models.layers.attention import kv_cache_bytes
+from repro.serve.backend import (DecodeOutcome, ExecutionBackend,
+                                 PrefillOutcome)
+from repro.serve.request import Request
+from repro.serve.steps import (_chunk_scan_fn, clear_cache_row,
+                               extract_cache_row, merge_cache_row,
+                               pow2_chunks)
+
+# one jitted "slice rows → decode → write back" per (cfg, occupancy
+# bucket); module-level so every backend instance (and repeated fig22
+# runs in one process) share compiled executables
+_DECODE_FNS: dict = {}
+
+
+def _decode_bucket_fn(cfg, n_pad: int):
+    key = (cfg, int(n_pad))
+    fn = _DECODE_FNS.get(key)
+    if fn is not None:
+        return fn
+
+    def step(params, caches, tok, pos):
+        # cache leaves are (n_blocks, B, ...); run only the occupied pow2
+        # prefix and write the updated rows back into the full cache
+        part = jax.tree.map(lambda a: a[:, :n_pad], caches)
+        logits, new_part, _ = model_lib.decode_step(
+            params, cfg, tok[:n_pad], part, pos[:n_pad])
+        full = jax.tree.map(lambda f, p: f.at[:, :n_pad].set(p),
+                            caches, new_part)
+        return logits, full
+
+    fn = _DECODE_FNS[key] = jax.jit(step)
+    return fn
+
+
+class _Prefilled:
+    """A prefilled request awaiting handoff/join: its B=1 cache, the
+    argmax first token, the prompt length, and the device it lives on."""
+
+    __slots__ = ("cache", "tok0", "length", "device")
+
+    def __init__(self, cache, tok0, length, device):
+        self.cache, self.tok0 = cache, tok0
+        self.length, self.device = length, device
+
+
+class _WorkerState:
+    """One decode worker's device-resident continuous batch.  Occupied
+    slots are always the prefix [0, n_active) — `release` compacts by
+    moving the last row into the freed slot."""
+
+    def __init__(self, device, cfg, slots, max_len, kv_dtype):
+        self.device = device
+        self.caches = jax.device_put(
+            model_lib.init_cache(cfg, slots, max_len, kv_dtype), device)
+        self.tok = np.zeros(slots, np.int32)
+        self.pos = np.zeros(slots, np.int32)
+        self.reqs: List[Optional[Request]] = [None] * slots
+        self.n_active = 0
+
+
+class RealBackend(ExecutionBackend):
+    """Measured jit'd execution behind the backend-agnostic serving loop.
+
+    The loop calls eagerly (prefill at admission, decode at each step
+    boundary); each call runs on this process's devices, blocks, and
+    returns its measured wall duration, which the loop replays on the
+    virtual clock and feeds to the calibrator."""
+
+    name = "real"
+    observes_decode = True
+
+    def __init__(self, model_cfg, params, pricer, serve_cfg, *,
+                 max_len: int = 128, chunk: int = 16,
+                 kv_dtype=jnp.float32, devices=None, warmup: bool = True):
+        self.cfg = model_cfg
+        self.pricer = pricer
+        self.serve = serve_cfg
+        self.max_len = int(max_len)
+        self.chunk = int(chunk)
+        self.kv_dtype = kv_dtype
+        self.prefill_devs, self.decode_devs = serve_device_pools(
+            serve_cfg.n_prefill_workers, serve_cfg.n_decode_workers, devices)
+        self._params: Dict = {}
+        for d in {*self.prefill_devs, *self.decode_devs}:
+            self._params[d] = jax.device_put(params, d)
+        self._workers = [
+            _WorkerState(d, model_cfg, serve_cfg.decode_slots, self.max_len,
+                         kv_dtype) for d in self.decode_devs]
+        self._pre: Dict[int, _Prefilled] = {}     # id(req) -> prefilled
+        self._parked: Dict[int, _Prefilled] = {}  # id(req) -> preempted
+        self._slot: Dict[int, int] = {}           # id(req) -> worker slot
+        self._seen_shapes: set = set()
+        self._rr = 0                              # handoff target rotation
+        self.unit_costs: Dict[str, float] = {}
+        if warmup:
+            self.warmup()
+
+    # ------------------------------------------------------------------ #
+    def prompt_for(self, req: Request) -> np.ndarray:
+        """Deterministic synthetic prompt for a request: the engine's
+        requests are shape descriptors (`DataItem`), not token streams, so
+        the backend materializes tokens from (item_id, seq len) — solo
+        replays in tests regenerate the identical prompt."""
+        seq = req.item.llm_seq_len(self.pricer.tpm)
+        length = max(1, min(int(seq), self.max_len - req.max_new_tokens - 1))
+        rng = np.random.default_rng([int(req.item.item_id), 1223])
+        return rng.integers(2, self.cfg.vocab_size, size=length,
+                            dtype=np.int64).astype(np.int32)
+
+    def _timed(self, fn, *args):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        return out, time.perf_counter() - t0
+
+    # ------------------------------------------------------------------ #
+    def prefill(self, worker: int, batch: Sequence[Request],
+                s_pad: int) -> PrefillOutcome:
+        dev = self.prefill_devs[worker % len(self.prefill_devs)]
+        params = self._params[dev]
+        fn = _chunk_scan_fn(self.cfg)
+        chunks: List[float] = []
+        actuals: List[float] = []
+        n_new = 0
+        for r in batch:
+            prompt = self.prompt_for(r)
+            caches = jax.device_put(
+                model_lib.init_cache(self.cfg, 1, self.max_len,
+                                     self.kv_dtype), dev)
+            toks = jax.device_put(jnp.asarray(prompt[None, :], jnp.int32),
+                                  dev)
+            logits, pos0, req_s = None, 0, 0.0
+            for clen in pow2_chunks(len(prompt), self.chunk):
+                (logits, caches), dt = self._timed(
+                    fn, params, caches, toks[:, pos0:pos0 + clen],
+                    jnp.int32(pos0))
+                pos0 += clen
+                req_s += dt
+                chunks.append(dt)
+                key = ("prefill", dev.id, clen)
+                if key not in self._seen_shapes:
+                    self._seen_shapes.add(key)
+                    n_new += 1
+            tok0 = int(jnp.argmax(logits[0]))
+            self._pre[id(r)] = _Prefilled(caches, tok0, len(prompt), dev)
+            actuals.append(req_s)
+        return PrefillOutcome(duration_s=float(sum(chunks)),
+                              per_request_actual=tuple(actuals),
+                              chunks=tuple(chunks), n_new_shapes=n_new)
+
+    # ------------------------------------------------------------------ #
+    def handoff(self, req: Request) -> float:
+        """Device-to-device transfer of the request's B=1 cache pytree to
+        a (round-robin) decode device; returns the measured seconds."""
+        art = self._pre[id(req)]
+        dev = self.decode_devs[self._rr % len(self.decode_devs)]
+        self._rr += 1
+        moved, dt = self._timed(lambda c: jax.device_put(c, dev), art.cache)
+        art.cache, art.device = moved, dev
+        return dt
+
+    def handoff_s_mean(self) -> float:
+        # admission-slack estimate only (the real transfer is measured)
+        return kv_cache_bytes(self.cfg, 1024, self.serve.kv_bytes_per_value) \
+            / (self.serve.kv_bandwidth_gbps * 1e9) + self.serve.kv_latency_s
+
+    # ------------------------------------------------------------------ #
+    def join(self, worker: int, req: Request) -> None:
+        w = self._workers[worker]
+        art = self._parked.pop(id(req), None)
+        if art is None:
+            art = self._pre.pop(id(req))
+        cache = art.cache
+        if art.device != w.device:       # joined a different worker than
+            cache = jax.device_put(cache, w.device)   # the handoff target
+        slot = w.n_active
+        w.caches = merge_cache_row(w.caches, cache, row=slot)
+        w.tok[slot] = art.tok0
+        w.pos[slot] = art.length
+        w.reqs[slot] = req
+        self._slot[id(req)] = slot
+        w.n_active += 1
+
+    def decode_step(self, worker: int,
+                    active: Sequence[Request]) -> DecodeOutcome:
+        w = self._workers[worker]
+        n = len(active)
+        assert n == w.n_active, (n, w.n_active)
+        n_pad = min(_pow2(n), self.serve.decode_slots)
+        fn = _decode_bucket_fn(self.cfg, n_pad)
+        tok = jax.device_put(jnp.asarray(w.tok), w.device)
+        pos = jax.device_put(jnp.asarray(w.pos), w.device)
+        (logits, w.caches), dt = self._timed(
+            fn, self._params[w.device], w.caches, tok, pos)
+        n_new = 0
+        key = ("decode", w.device.id, n_pad)
+        if key not in self._seen_shapes:
+            self._seen_shapes.add(key)
+            n_new += 1
+        log = np.asarray(logits)
+        for r in active:
+            slot = self._slot[id(r)]
+            r.generated.append(int(w.tok[slot]))   # the token fed this step
+            w.tok[slot] = int(np.argmax(log[slot]))
+            w.pos[slot] += 1
+        return DecodeOutcome(duration_s=dt, n_new_shapes=n_new)
+
+    def release(self, worker: int, req: Request, park: bool = False) -> None:
+        w = self._workers[worker]
+        slot = self._slot.pop(id(req))
+        if park:
+            # snapshot the row before compaction overwrites it; the parked
+            # state re-joins (possibly on another worker) bit-for-bit
+            self._parked[id(req)] = _Prefilled(
+                extract_cache_row(w.caches, slot), int(w.tok[slot]),
+                int(w.pos[slot]), w.device)
+        w.n_active -= 1
+        last = w.n_active
+        if slot != last:                 # compact: move last row into slot
+            w.caches = merge_cache_row(w.caches, w.caches, row=slot,
+                                       src_row=last)
+            moved = w.reqs[last]
+            w.reqs[slot] = moved
+            self._slot[id(moved)] = slot
+            w.tok[slot] = w.tok[last]
+            w.pos[slot] = w.pos[last]
+        w.caches = clear_cache_row(w.caches, last)
+        w.reqs[last] = None
+
+    # ------------------------------------------------------------------ #
+    def warmup(self) -> Dict[str, float]:
+        """Compile the bounded jit shape set up front (chunk sizes per
+        prefill device, occupancy buckets per decode device) so measured
+        serving durations exclude compile time, and record post-compile
+        unit costs (`unit_costs`) — fig22 derives machine-independent SLOs
+        and arrival rates from them."""
+        sizes = sorted({self.chunk} | {1 << k for k in
+                                       range((self.chunk - 1).bit_length())})
+        fn = _chunk_scan_fn(self.cfg)
+        for dev in dict.fromkeys(self.prefill_devs):
+            params = self._params[dev]
+            caches = jax.device_put(
+                model_lib.init_cache(self.cfg, 1, self.max_len,
+                                     self.kv_dtype), dev)
+            for clen in sizes:
+                toks = jax.device_put(
+                    jnp.full((1, clen), 2, jnp.int32), dev)
+                _, dt = self._timed(fn, params, caches, toks, jnp.int32(0))
+                _, dt = self._timed(fn, params, caches, toks, jnp.int32(0))
+                if clen == self.chunk:
+                    self.unit_costs["prefill_s_per_tok"] = dt / clen
+        buckets = sorted({min(_pow2(k), self.serve.decode_slots)
+                          for k in range(1, self.serve.decode_slots + 1)})
+        for w in self._workers:
+            params = self._params[w.device]
+            tok = jax.device_put(jnp.zeros(self.serve.decode_slots,
+                                           jnp.int32), w.device)
+            pos = jax.device_put(jnp.zeros(self.serve.decode_slots,
+                                           jnp.int32), w.device)
+            caches = jax.device_put(
+                model_lib.init_cache(self.cfg, self.serve.decode_slots,
+                                     self.max_len, self.kv_dtype), w.device)
+            for b in buckets:
+                step = _decode_bucket_fn(self.cfg, b)
+                _, dt = self._timed(step, params, caches, tok, pos)
+                _, dt = self._timed(step, params, caches, tok, pos)
+                self.unit_costs[f"decode_step_s_b{b}"] = dt
+        self.unit_costs["decode_step_s"] = \
+            self.unit_costs[f"decode_step_s_b{buckets[-1]}"]
+        return self.unit_costs
+
+    def probe(self, requests: Sequence[Request], *, n_shapes: int = 4,
+              n_obs: int = 2) -> None:
+        """Seed the pricer's calibrator with measured (prefill, decode)
+        observations for up to ``n_shapes`` distinct request shapes, then
+        flush the pricer so admission prices in wall seconds from the
+        first round.  The perf model predicts accelerator-seconds for the
+        profiled arch while the backend measures host wall-seconds — the
+        calibrator's per-bucket ratios are exactly the unit conversion,
+        but only after at least one observation per bucket."""
+        cal = self.pricer.calibrator
+        if cal is None:
+            return
+        seen, reps = set(), []
+        for r in requests:
+            k = self.pricer.shapes(r)
+            if k not in seen:
+                seen.add(k)
+                reps.append(r)
+            if len(reps) >= n_shapes:
+                break
+        dev = self.prefill_devs[0]
+        params = self._params[dev]
+        fn = _chunk_scan_fn(self.cfg)
+        for r in reps:
+            base, _, s = self.pricer.base(r)
+            prompt = self.prompt_for(r)
+            toks = jax.device_put(jnp.asarray(prompt[None, :], jnp.int32),
+                                  dev)
+            for _ in range(n_obs):
+                caches = jax.device_put(
+                    model_lib.init_cache(self.cfg, 1, self.max_len,
+                                         self.kv_dtype), dev)
+                pos0, total = 0, 0.0
+                for clen in pow2_chunks(len(prompt), self.chunk):
+                    (_, caches), dt = self._timed(
+                        fn, params, caches, toks[:, pos0:pos0 + clen],
+                        jnp.int32(pos0))
+                    pos0 += clen
+                    total += dt
+                cal.observe("prefill", s, self.pricer.tp, base, total)
+                # decode at occupancy 1, context = the request's seq len
+                step = _decode_bucket_fn(self.cfg, 1)
+                w = self._workers[0]
+                tok = jax.device_put(jnp.zeros(self.serve.decode_slots,
+                                               jnp.int32), w.device)
+                pos = jax.device_put(
+                    jnp.full(self.serve.decode_slots, len(prompt),
+                             jnp.int32), w.device)
+                dcaches = jax.device_put(
+                    model_lib.init_cache(self.cfg, self.serve.decode_slots,
+                                         self.max_len, self.kv_dtype),
+                    w.device)
+                _, ddt = self._timed(step, self._params[w.device], dcaches,
+                                     tok, pos)
+                cal.observe("decode", float(_pow2(int(s))), self.pricer.tp,
+                            self.pricer.decode_tok_base_s(float(s)), ddt)
+        self.pricer.flush()

@@ -60,6 +60,11 @@ class Request:
     finish_s: float = -1.0
     tokens_done: int = 0
     decode_worker: int = -1
+    n_preempted: int = 0              # decode-slot evictions (SLO rescue)
+    #: generated token ids — filled by real backends only (the emulation
+    #: never materializes tokens); used to pin continuous-batch decode
+    #: token-identical to a solo run of the same prompt
+    generated: List[int] = field(default_factory=list)
 
     @property
     def deadline_s(self) -> float:

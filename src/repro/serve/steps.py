@@ -139,6 +139,95 @@ def prefill_into_cache(cfg: ModelConfig, params, prompt, max_len: int,
     return logits, caches
 
 
+def pow2_chunks(length: int, chunk: int) -> list:
+    """Decompose a prompt length into a bounded set of chunk sizes: full
+    ``chunk``-token blocks, then a descending power-of-two decomposition
+    of the remainder.  Any length therefore compiles at most
+    ``1 + log2(chunk)`` distinct chunk shapes ({chunk} ∪ {pow2 < chunk})
+    — the chunked-prefill analogue of the engine's pow2 batch buckets.
+
+    >>> pow2_chunks(45, 16)
+    [16, 16, 8, 4, 1]
+    >>> sum(pow2_chunks(45, 16))
+    45
+    """
+    if chunk < 1:
+        raise ValueError(f"chunk must be >= 1, got {chunk}")
+    out = []
+    rem = int(length)
+    while rem >= chunk:
+        out.append(chunk)
+        rem -= chunk
+    tail = []
+    p = 1
+    while rem:
+        if rem & p:
+            tail.append(p)
+            rem -= p
+        p <<= 1
+    out.extend(reversed(tail))
+    return out
+
+
+# one jitted chunk-scan per model config; jax's own jit cache handles the
+# per-(B, chunk_len, cache) shape specializations under it
+_CHUNK_FNS: dict = {}
+
+
+def _chunk_scan_fn(cfg: ModelConfig) -> Callable:
+    fn = _CHUNK_FNS.get(cfg)
+    if fn is not None:
+        return fn
+
+    def chunk_step(params, caches, toks, pos0):
+        # toks: (B, clen); pos0: scalar int32 (dynamic — offsets don't
+        # recompile).  Teacher-force the chunk through decode_step via
+        # lax.scan: same numerical path as one-shot prefill_into_cache.
+        def body(c, xs):
+            tok_t, p_t = xs
+            logits, c2, _ = model_lib.decode_step(params, cfg, tok_t, c, p_t)
+            return c2, logits
+
+        steps = toks.shape[1]
+        xs = (jnp.moveaxis(toks, 1, 0),
+              pos0 + jnp.arange(steps, dtype=jnp.int32))
+        caches, logits_seq = jax.lax.scan(body, caches, xs)
+        return logits_seq[-1], caches
+
+    fn = _CHUNK_FNS[cfg] = jax.jit(chunk_step)
+    return fn
+
+
+def prefill_into_cache_chunked(cfg: ModelConfig, params, prompt,
+                               max_len: int, kv_dtype=jnp.float32,
+                               chunk: int = 16):
+    """`prefill_into_cache`, split into `pow2_chunks`-sized jitted scans.
+
+    Token-identical to the one-shot version (same per-token decode path,
+    pinned by tests/test_serve_backend.py) but each chunk returns to the
+    caller, so a serving loop can interleave decode steps with a long
+    prompt's prefill instead of stalling behind it.  Returns
+    ``(last_logits (B, vocab), caches)``."""
+    B, S = prompt.shape
+    caches = model_lib.init_cache(cfg, B, max_len, kv_dtype)
+    fn = _chunk_scan_fn(cfg)
+    toks = jnp.asarray(prompt, jnp.int32)
+    logits, pos0 = None, 0
+    for clen in pow2_chunks(S, chunk):
+        logits, caches = fn(params, caches, toks[:, pos0:pos0 + clen],
+                            jnp.int32(pos0))
+        pos0 += clen
+    return logits, caches
+
+
+def extract_cache_row(caches, row: int):
+    """Inverse of `merge_cache_row`: slice batch row ``row`` out of a
+    stacked cache pytree as a B=1 cache — the KV state that leaves with a
+    preempted request (decode-slot preemption parks it; a later re-join
+    merges it back) or rides a device-to-device handoff."""
+    return jax.tree.map(lambda a: a[:, row:row + 1], caches)
+
+
 def clear_cache_row(caches, row: int):
     """Reset batch row ``row`` of a stacked cache pytree to the fresh-init
     state (zeros for KV/SSM state, −1 for ``kpos`` validity) — called when

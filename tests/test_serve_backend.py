@@ -1,0 +1,408 @@
+"""Contract tests for the serving-loop / execution-backend split.
+
+Four layers:
+
+  * backend seam: the refactored loop driving `EmulatedBackend` replays
+    PR 6's discrete-event stream **byte-for-byte** (differential golden,
+    pinned against `tests/golden/fig19_prerefactor.json` captured on the
+    pre-refactor ServeEngine);
+  * pricing: `PrefillPricer.flush()` invalidates the decode-step
+    token-cost fits, not just prefill prices (regression — stale decode
+    fits survived a drift re-price before this PR);
+  * real substrate: chunked prefill is token-identical to one-shot
+    `prefill_into_cache`; a cache-row transferred across devices
+    preserves its decode continuation bit-for-bit (subprocess with
+    forced host devices); `RealBackend`'s engine-driven generations
+    match solo replays, including through a park → re-join preemption;
+  * engine policy: decode-slot preemption rescues an urgent request and
+    the victim completes after re-joining.
+
+fig22 smoke (tier-1) + acceptance (slow) close the measured
+calibrate → drift → re-price loop.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.common.types import ModelConfig
+from repro.core.engine import DFLOPEngine
+from repro.core.optimizer.space import ClusterSpec
+from repro.data.items import DataItem
+from repro.models import model as model_lib
+from repro.serve import (PrefillPricer, Request, ServeConfig,
+                         extract_cache_row, make_decode_step,
+                         merge_cache_row, pow2_chunks, prefill_into_cache,
+                         prefill_into_cache_chunked)
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+GOLDEN = os.path.join(ROOT, "tests", "golden", "fig19_prerefactor.json")
+
+TPM = 8
+ENC = ModelConfig(name="tb-enc", family="vlm-enc", n_layers=2, d_model=64,
+                  n_heads=4, n_kv_heads=4, d_ff=128, vocab_size=0,
+                  causal=False, use_rope=False, input_embed_dim=32,
+                  has_lm_head=False)
+LLM = ModelConfig(name="tb-llm", family="dense", n_layers=2, d_model=64,
+                  n_heads=4, n_kv_heads=2, d_ff=256, vocab_size=128,
+                  dtype="float32")
+MAX_LEN = 64
+
+
+@pytest.fixture(scope="module")
+def tiny_engine():
+    from repro.data.synthetic import MixedDataset
+    eng = DFLOPEngine(llm_cfg=LLM, enc_cfg=ENC, e_seq_len=16,
+                      cluster=ClusterSpec(n_chips=4, chips_per_node=4,
+                                          mem_bytes=16e9),
+                      tokens_per_media_item=TPM)
+    eng.profile(MixedDataset("mixed", seed=0, tokens_per_media_item=TPM),
+                n_samples=64)
+    return eng
+
+
+@pytest.fixture(scope="module")
+def tiny_params():
+    return model_lib.init(jax.random.PRNGKey(0), LLM)
+
+
+def _req(i, *, arrival=0.0, slo=60.0, n_media=1, text=16, max_new=6,
+         factor=1.0, modality="single_image"):
+    return Request(item=DataItem(n_media, text, modality, i),
+                   arrival_s=arrival, slo_s=slo, max_new_tokens=max_new,
+                   true_factor=factor)
+
+
+def _solo_generate(cfg, params, prompt_1d, max_new, max_len=MAX_LEN):
+    """Reference: the request never leaves its own B=1 cache."""
+    prompt = jnp.asarray(np.asarray(prompt_1d)[None, :], jnp.int32)
+    logits, caches = prefill_into_cache(cfg, params, prompt, max_len)
+    decode = jax.jit(make_decode_step(cfg))
+    toks, pos = [], prompt.shape[1]
+    tok = jnp.argmax(logits, axis=-1).reshape(1).astype(jnp.int32)
+    for _ in range(max_new):
+        toks.append(int(tok[0]))
+        logits, caches = decode(params, caches, tok, pos)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        pos += 1
+    return toks
+
+
+# --------------------------------------------------------------------- #
+# backend seam: the refactor preserves the emulated event stream
+# --------------------------------------------------------------------- #
+def test_emulated_backend_stream_identical_to_prerefactor_golden():
+    """Differential: fig19's smoke rows through the refactored
+    loop + `EmulatedBackend` must be byte-equal (sorted-key JSON) to the
+    stream captured on the pre-refactor monolithic ServeEngine."""
+    from benchmarks.fig19_serving import run_smoke
+    with open(GOLDEN) as f:
+        want = json.load(f)
+    got = run_smoke(seed=0)
+    assert json.dumps(got, sort_keys=True) == \
+        json.dumps(want["smoke"], sort_keys=True)
+
+
+@pytest.mark.slow
+def test_emulated_backend_medium_stream_identical_to_prerefactor_golden():
+    """Same contract on a longer, queue-saturating stream (one QPS point,
+    160 requests) — chunk boundaries, handoff pricing and drift events
+    all replay identically."""
+    from benchmarks.fig19_serving import run
+    with open(GOLDEN) as f:
+        want = json.load(f)
+    got = run(qps_points=(3.0,), n_requests=160, seed=0)
+    assert json.dumps(got, sort_keys=True) == \
+        json.dumps(want["medium_qps3_n160"], sort_keys=True)
+
+
+# --------------------------------------------------------------------- #
+# pricing: flush() must invalidate decode fits too (regression)
+# --------------------------------------------------------------------- #
+def test_flush_invalidates_decode_token_cost_fit(tiny_engine):
+    from repro.runtime import OnlineCalibrator
+    cal = OnlineCalibrator()
+    pricer = PrefillPricer(tiny_engine.perf, TPM, calibrator=cal)
+    c = 256
+    base = pricer.decode_tok_base_s(c)
+    d0 = pricer.decode_tok_s(c)              # memoizes ratio 1.0
+    assert d0 == base
+    for _ in range(12):                      # teach decode cells 2×
+        cal.observe("decode", 256.0, 1, 1.0, 2.0)
+    assert pricer.decode_tok_s(c) == d0      # memoized: stale until flush
+    pricer.flush()
+    assert pricer.decode_tok_s(c) == pytest.approx(base * 2.0, rel=1e-6)
+    # prefill prices flush alongside (the pre-existing contract)
+    assert pricer.n_flushes == 1
+
+
+# --------------------------------------------------------------------- #
+# real substrate: chunked prefill + cross-device row transfer
+# --------------------------------------------------------------------- #
+def test_pow2_chunks_cover_length_with_bounded_shape_set():
+    for length in (1, 5, 16, 26, 45, 63):
+        chunks = pow2_chunks(length, 16)
+        assert sum(chunks) == length
+        # every chunk is the full chunk size or a power of two below it
+        assert all(c == 16 or (c & (c - 1)) == 0 for c in chunks)
+    with pytest.raises(ValueError):
+        pow2_chunks(4, 0)
+
+
+def test_chunked_prefill_token_identical_to_one_shot(tiny_params):
+    """Satellite contract: `prefill_into_cache_chunked` must hand decode
+    the same state as one-shot `prefill_into_cache` — same next token and
+    an identical greedy continuation."""
+    rng = jax.random.PRNGKey(11)
+    for n, length in enumerate((5, 13, 26)):   # 1-chunk, ragged, multi
+        prompt = jax.random.randint(jax.random.fold_in(rng, n), (length,),
+                                    2, LLM.vocab_size)
+        l1, c1 = prefill_into_cache(LLM, tiny_params, prompt[None, :],
+                                    MAX_LEN)
+        l2, c2 = prefill_into_cache_chunked(LLM, tiny_params,
+                                            prompt[None, :], MAX_LEN,
+                                            chunk=8)
+        assert int(jnp.argmax(l1)) == int(jnp.argmax(l2))
+        np.testing.assert_allclose(np.asarray(l1).ravel(),
+                                   np.asarray(l2).ravel(),
+                                   rtol=1e-5, atol=1e-6)
+        solo = _solo_generate(LLM, tiny_params, prompt, 6)
+        decode = jax.jit(make_decode_step(LLM))
+        tok = jnp.argmax(l2, axis=-1).reshape(1).astype(jnp.int32)
+        got, pos = [], length
+        for _ in range(6):
+            got.append(int(tok[0]))
+            l2, c2 = decode(tiny_params, c2, tok, pos)
+            tok = jnp.argmax(l2, axis=-1).astype(jnp.int32)
+            pos += 1
+        assert got == solo
+
+
+def test_cache_row_transfer_across_devices_bit_exact():
+    """Satellite contract (subprocess, forced host devices): a prefilled
+    B=1 cache `jax.device_put` to a *different* device, merged into a
+    shared decode batch there, is bit-identical to the source and its
+    greedy continuation matches the solo run exactly."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.common.types import ModelConfig
+        from repro.models import model as model_lib
+        from repro.serve import (extract_cache_row, make_decode_step,
+                                 merge_cache_row, prefill_into_cache)
+        cfg = ModelConfig(name="tb-llm", family="dense", n_layers=2,
+                          d_model=64, n_heads=4, n_kv_heads=2, d_ff=256,
+                          vocab_size=128, dtype="float32")
+        MAX_LEN = 32
+        params = model_lib.init(jax.random.PRNGKey(0), cfg)
+        d_pre, d_dec = jax.devices()[0], jax.devices()[1]
+        assert d_pre != d_dec
+        prompt = jax.random.randint(jax.random.PRNGKey(7), (9,), 2,
+                                    cfg.vocab_size)
+
+        # solo reference on the prefill device
+        def solo():
+            l, c = prefill_into_cache(cfg, params, prompt[None, :], MAX_LEN)
+            dec = jax.jit(make_decode_step(cfg))
+            tok = jnp.argmax(l, -1).reshape(1).astype(jnp.int32)
+            toks, pos = [], 9
+            for _ in range(6):
+                toks.append(int(tok[0]))
+                l, c = dec(params, c, tok, pos)
+                tok = jnp.argmax(l, -1).astype(jnp.int32)
+                pos += 1
+            return toks
+        want = solo()
+
+        # prefill on device 0, hand the cache off to device 1
+        pp = jax.device_put(params, d_pre)
+        l, cache = prefill_into_cache(cfg, pp, jax.device_put(
+            prompt[None, :], d_pre), MAX_LEN)
+        moved = jax.device_put(cache, d_dec)
+        for a, b in zip(jax.tree_util.tree_leaves(cache),
+                        jax.tree_util.tree_leaves(moved)):
+            assert np.array_equal(np.asarray(a), np.asarray(b)), "lossy"
+            assert b.devices() == {d_dec}
+        shared = jax.device_put(
+            model_lib.init_cache(cfg, 2, MAX_LEN, jnp.float32), d_dec)
+        shared = merge_cache_row(shared, moved, row=1)
+        row = extract_cache_row(shared, 1)
+        for a, b in zip(jax.tree_util.tree_leaves(cache),
+                        jax.tree_util.tree_leaves(row)):
+            assert np.array_equal(np.asarray(a), np.asarray(b)), "merge"
+        # decode continuation on the far device, in the shared batch
+        pd = jax.device_put(params, d_dec)
+        dec = jax.jit(make_decode_step(cfg))
+        tok = jnp.asarray([0, int(jnp.argmax(l))], jnp.int32)
+        pos = jnp.asarray([0, 9], jnp.int32)
+        got = []
+        for _ in range(6):
+            got.append(int(tok[1]))
+            lg, shared = dec(pd, shared, tok, pos)
+            tok = jnp.argmax(lg, -1).astype(jnp.int32)
+            pos = pos + 1
+        assert got == want, (got, want)
+        print("OK")
+        """)], capture_output=True, text=True, env=env, timeout=600)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "OK" in r.stdout
+
+
+# --------------------------------------------------------------------- #
+# RealBackend: engine-driven generations match solo replays
+# --------------------------------------------------------------------- #
+def test_real_backend_engine_tokens_match_solo(tiny_engine, tiny_params):
+    """The whole loop — admission, chunked prefill, device handoff,
+    continuous-batch decode with join/leave/compaction — must be a no-op
+    for the tokens: every request generates exactly its solo sequence."""
+    cfg = ServeConfig(n_prefill_workers=1, n_decode_workers=1,
+                      decode_slots=2, max_prefill_batch=2)
+    serve = tiny_engine.serving(serve_cfg=cfg, backend="real",
+                                model_params=tiny_params, max_len=MAX_LEN,
+                                chunk=16, warmup=False)
+    rng = np.random.default_rng(3)
+    reqs = [_req(i, arrival=float(i) * 1e-3,
+                 n_media=int(rng.integers(1, 4)),
+                 text=int(rng.integers(4, 20)), max_new=5)
+            for i in range(6)]
+    rep = serve.run(reqs)
+    assert rep.n_completed == 6
+    assert serve.metrics.n_prefill_chunks > 0    # multi-chunk prefills ran
+    assert serve.prediction_log                  # measured feedback flowed
+    assert {m for m, _, _ in serve.prediction_log} == {"prefill", "decode"}
+    for r in reqs:
+        want = _solo_generate(LLM, tiny_params,
+                              serve.backend.prompt_for(r), 5)
+        assert r.generated == want, r.item.item_id
+
+
+def test_real_backend_park_rejoin_preserves_generation(tiny_engine,
+                                                       tiny_params):
+    """Preemption substrate: park a mid-decode row (snapshot before slot
+    compaction), decode the survivor, re-join the parked request — its
+    full token sequence must still match the solo replay bit-for-bit."""
+    from repro.serve.real import RealBackend
+    pricer = PrefillPricer(tiny_engine.perf, TPM)
+    cfg = ServeConfig(n_prefill_workers=1, n_decode_workers=1,
+                      decode_slots=2, max_prefill_batch=2)
+    be = RealBackend(LLM, tiny_params, pricer, cfg, max_len=MAX_LEN,
+                     chunk=8, warmup=False)
+    ra = _req(0, n_media=2, text=10, max_new=6)
+    rb = _req(1, n_media=1, text=5, max_new=6)
+    solo = {0: _solo_generate(LLM, tiny_params, be.prompt_for(ra), 6),
+            1: _solo_generate(LLM, tiny_params, be.prompt_for(rb), 6)}
+    be.prefill(0, [ra, rb], s_pad=MAX_LEN)
+    for r in (ra, rb):
+        be.handoff(r)
+        be.join(0, r)
+    for _ in range(2):
+        be.decode_step(0, [ra, rb])
+    be.release(0, ra, park=True)             # preempt A mid-generation
+    for _ in range(4):                       # B finishes alone
+        be.decode_step(0, [rb])
+    be.release(0, rb)
+    be.join(0, ra)                           # A re-joins from the park
+    for _ in range(4):
+        be.decode_step(0, [ra])
+    be.release(0, ra)
+    assert ra.generated == solo[0]
+    assert rb.generated == solo[1]
+    assert ra.n_preempted == 0               # engine-level counter only
+
+
+# --------------------------------------------------------------------- #
+# engine policy: decode-slot preemption rescues an urgent request
+# --------------------------------------------------------------------- #
+def test_preemption_rescues_urgent_request(tiny_engine):
+    """Emulated loop, one decode slot: a slack-rich long request is
+    parked for an already-late arrival, which finishes first; the victim
+    re-joins through the ready queue and still completes."""
+    cfg = ServeConfig(n_prefill_workers=1, n_decode_workers=1,
+                      decode_slots=1, max_prefill_batch=1,
+                      preempt_slack_s=10.0)
+    serve = tiny_engine.serving(serve_cfg=cfg, drift=False)
+    victim = _req(0, arrival=0.0, slo=1e9, max_new=8, factor=1e6)
+    urgent = _req(1, arrival=0.0, slo=0.0, max_new=4)
+    rep = serve.run([victim, urgent])
+    assert rep.n_completed == 2
+    assert serve.n_preemptions >= 1
+    assert serve.metrics.n_preemptions >= 1
+    assert victim.n_preempted >= 1
+    assert urgent.finish_s < victim.finish_s
+    assert "decode_preempt" in [e[1] for e in serve.trace._events]
+
+
+def test_preemption_off_by_default(tiny_engine):
+    """`preempt_slack_s=None` must reproduce PR 6 behavior exactly — no
+    preemption machinery in the event stream."""
+    serve = tiny_engine.serving(serve_cfg=ServeConfig(
+        n_prefill_workers=1, n_decode_workers=1, decode_slots=1,
+        max_prefill_batch=1), drift=False)
+    victim = _req(0, arrival=0.0, slo=1e9, max_new=8, factor=1e6)
+    urgent = _req(1, arrival=0.0, slo=0.0, max_new=4)
+    serve.run([victim, urgent])
+    assert serve.n_preemptions == 0
+    assert victim.n_preempted == 0
+    assert urgent.finish_s > victim.finish_s     # FIFO-ish completion
+
+
+# --------------------------------------------------------------------- #
+# device pools
+# --------------------------------------------------------------------- #
+def test_serve_device_pools_contract():
+    from repro.launch.mesh import serve_device_pools
+    devs = [f"d{i}" for i in range(8)]
+    pre, dec = serve_device_pools(2, 3, devices=devs)
+    assert pre == ["d0", "d1"] and dec == ["d2", "d3", "d4"]
+    assert not set(pre) & set(dec)               # disjoint when possible
+    pre, dec = serve_device_pools(2, 2, devices=["d0"])
+    assert pre == ["d0", "d0"] and dec == ["d0", "d0"]   # graceful wrap
+    with pytest.raises(ValueError):
+        serve_device_pools(0, 2, devices=devs)
+
+
+def test_kv_cache_bytes_scales_linearly():
+    from repro.models.layers.attention import kv_cache_bytes
+    b1 = kv_cache_bytes(LLM, 1024)
+    assert b1 > 0
+    assert kv_cache_bytes(LLM, 2048) == pytest.approx(2 * b1)
+    assert kv_cache_bytes(LLM, 1024, bytes_per_value=4) == \
+        pytest.approx(2 * b1)
+
+
+# --------------------------------------------------------------------- #
+# fig22: smoke (tier-1) + acceptance (slow)
+# --------------------------------------------------------------------- #
+def test_fig22_smoke():
+    from benchmarks.fig22_real_serving import run_smoke
+    rows = run_smoke()
+    acc = rows[-1]
+    assert acc.get("phase") == "acceptance"
+    assert acc["reprice_fired"], "video shift did not trip re-price"
+    assert acc["err_shrank"], "calibration did not reduce error"
+    reports = [r for r in rows if "policy" in r]
+    assert {r["policy"] for r in reports} == {"fifo", "slo"}
+    assert all(r["n_completed"] == r["n_requests"] == 16 for r in reports)
+    assert any(r["n_prefill_chunks"] > 0 for r in reports)
+
+
+@pytest.mark.slow
+def test_fig22_real_serving_acceptance():
+    """Headline: on the real loop, re-price fires on the mid-stream video
+    shift, emulated-vs-measured error shrinks after calibration, and SLO
+    admission beats FIFO goodput at >=1 swept load point."""
+    from benchmarks.fig22_real_serving import run
+    rows = run()
+    acc = rows[-1]
+    assert acc.get("phase") == "acceptance"
+    assert acc["reprice_fired"], rows
+    assert acc["err_shrank"], rows
+    assert acc["slo_goodput_win"], rows

@@ -9,7 +9,10 @@ numbers, not the full row dumps) to committed JSON files at the repo root:
   * ``BENCH_train.json``   — fig16 (drift re-plan recovery), fig17
     (objective sweep), fig18 (lookahead composer), fig20 (schedule-family
     search), fig21 (elastic host-loss recovery vs naive stall);
-  * ``BENCH_serving.json`` — fig19 (data-aware serving goodput/p99).
+  * ``BENCH_serving.json`` — fig19 (data-aware serving goodput/p99) and
+    fig22 (real-backend serving: measured drift → re-price loop; its rows
+    are wall-clock measurements, so only the acceptance booleans are
+    expected to reproduce).
 
 Run from the repo root (about a minute of wall clock):
 
@@ -53,7 +56,19 @@ SNAPSHOTS = {
     },
     "BENCH_serving.json": {
         "fig19": ("benchmarks.fig19_serving", {}),
+        "fig22": ("benchmarks.fig22_real_serving", {}),
     },
+}
+
+# figure-specific headline invariants enforced by --check: keys that must
+# be present in some headline row, and keys that must also be truthy.
+# fig22 rows are *measured* (wall-clock), so only its load-independent
+# acceptance booleans are pinned — the drift re-price must have fired and
+# calibration must have reduced prediction error; the goodput A/B is
+# load-noise-sensitive and is pinned by the slow test instead.
+HEADLINE_REQUIRED = {
+    "fig22": {"present": ("reprice_fired", "err_shrank", "slo_goodput_win"),
+              "truthy": ("reprice_fired", "err_shrank")},
 }
 
 
@@ -121,6 +136,10 @@ def check(names=None) -> List[str]:
                 or "git" not in data:
             problems.append(f"{name}: expected {{git, figures}} object")
             continue
+        missing = set(SNAPSHOTS[name]) - set(data["figures"])
+        if missing:
+            problems.append(f"{name}: missing figure(s) "
+                            f"{sorted(missing)} (re-run the snapshot)")
         for fig, entry in data["figures"].items():
             for key in ("module", "args", "wall_s", "headline"):
                 if key not in entry:
@@ -131,6 +150,20 @@ def check(names=None) -> List[str]:
                 problems.append(
                     f"{name}: {fig}: headline must be a non-empty "
                     "list of summary rows")
+                continue
+            req = HEADLINE_REQUIRED.get(fig)
+            if req is None:
+                continue
+            rows = [r for r in headline
+                    if all(k in r for k in req["present"])]
+            if not rows:
+                problems.append(
+                    f"{name}: {fig}: no headline row carries "
+                    f"{list(req['present'])}")
+            elif not all(any(r[k] for r in rows) for k in req["truthy"]):
+                problems.append(
+                    f"{name}: {fig}: acceptance invariant(s) "
+                    f"{list(req['truthy'])} not met in the snapshot")
     return problems
 
 

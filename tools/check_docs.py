@@ -56,6 +56,8 @@ DOCTEST_MODULES = [
     "repro.serve.request",
     "repro.serve.admission",
     "repro.serve.engine",
+    "repro.serve.backend",
+    "repro.serve.steps",
 ]
 
 # [text](target) — excluding images; target split from an optional title
