@@ -1,0 +1,100 @@
+"""Fig. 23 (extension): kernel-tier predict-vs-measure validation.
+
+DFLOP's premise is that the planner's duration predictions track what the
+hardware does, but until this figure nothing compared *measured* kernel
+time against the analytic tables (``core.profiling``) that every
+plan/schedule/composition decision is priced from.  Fig. 23 closes that
+loop at the lowest layer: it microbenchmarks the three Pallas kernels
+(packed flash attention, mamba selective scan, RWKV6 WKV) forward and
+forward+backward across the profiler's pow2 shape buckets — the same
+``shape_bucket`` keys ``runtime.calibration`` corrects with — and reports
+the measured-vs-analytic ratio per bucket (``docs/kernels.md``).
+
+Host-unit normalization (see ``repro.kernels.bench``): one geomean unit
+per (kernel, direction) folds out the host constant (CPU interpret mode is
+~1e6× a v5e; a real TPU is ~1×), so the per-bucket ratio validates
+*shape-scaling fidelity* — the property the planner's relative decisions
+depend on.  The same measurements are seeded into ``OnlineCalibrator``
+cells (module "llm", the online scheduler's decoder key), maturing every
+touched cell past ``min_obs`` so the search prices those buckets from
+measured kernel time immediately.
+
+Headline (acceptance, snapshotted to ``BENCH_train.json`` and pinned by
+``bench_snapshot --check``): every benchmarked bucket's ratio is finite
+and within the declared band — by construction the geomean of each group
+is exactly 1, so the band bounds how far any single bucket's scaling
+deviates from the FLOP model.
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+from typing import Dict, List, Optional, Sequence
+
+from repro.kernels.bench import bench_kernel, normalize, seed_calibrator
+from repro.runtime.calibration import OnlineCalibrator
+
+KERNELS = ("attention", "mamba", "rwkv6")
+
+# |log(ratio)| ≤ log(BAND): a bucket may deviate at most BAND× from the
+# FLOP model's scaling.  Interpret-mode timings are noisy (Python dispatch
+# amortizes differently across sizes), so the band is wide; on a real TPU
+# the same harness should hold a much tighter one.
+BAND = 8.0
+
+
+def run(seqs: Sequence[int] = (128, 256, 512), iters: int = 3,
+        kernels: Sequence[str] = KERNELS, band: float = BAND,
+        out_dir: Optional[str] = None) -> List[Dict]:
+    """Bench ``kernels`` × ``seqs`` fwd/fwd+bwd; returns ratio rows + a
+    summary row carrying the band acceptance booleans."""
+    rows: List[Dict] = []
+    for kernel in kernels:
+        rows.extend(bench_kernel(kernel, seqs, iters=iters))
+    normalize(rows)
+
+    cal = OnlineCalibrator()
+    n_obs = seed_calibrator(cal, rows)
+    mature = [c for c in cal.cells.values() if c.n >= cal.min_obs]
+
+    ratios = [r["ratio"] for r in rows]
+    finite = all(math.isfinite(x) for x in ratios)
+    within = finite and all(1.0 / band <= x <= band for x in ratios)
+    fig_rows: List[Dict] = [{
+        "figure": "fig23", "kernel": r["kernel"], "direction": r["direction"],
+        "tokens": r["tokens"], "bucket": r["bucket"], "flops": r["flops"],
+        "analytic_s": r["analytic_s"], "measured_s": r["measured_s"],
+        "unit": r["unit"], "ratio": r["ratio"],
+    } for r in rows]
+    # measured fields are wall-clock noise: the summary row pins only the
+    # structural facts (coverage + band acceptance), like fig22
+    fig_rows.append({
+        "figure": "fig23", "summary": True,
+        "kernels": list(kernels), "seqs": [int(s) for s in seqs],
+        "n_rows": len(rows),
+        "n_buckets": len({(r["kernel"], r["direction"], r["bucket"])
+                          for r in rows}),
+        "band": band,
+        "ratios_finite": finite,
+        "ratios_within_band": within,
+        "calibrator_obs": n_obs,
+        "calibrator_cells_mature": len(mature),
+    })
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        path = os.path.join(out_dir, "fig23_kernels.json")
+        with open(path, "w", encoding="utf-8") as f:
+            json.dump(fig_rows, f, indent=2)
+        print(f"wrote {path}")
+    return fig_rows
+
+
+def run_smoke() -> List[Dict]:
+    """Tier-1 CI entry: tiny shapes, 2 iterations (~seconds)."""
+    return run(seqs=(64, 128), iters=2)
+
+
+if __name__ == "__main__":
+    out = run(out_dir="benchmarks/results")
+    print(json.dumps(out[-1], indent=2))

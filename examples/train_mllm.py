@@ -243,6 +243,9 @@ def main():
         params, opt, m = step(params, opt, batch, lr_fn(k))
         m["loss"].block_until_ready()
         ctl.observe_step(out, time.time() - ts)
+        # NaN (no MoE layers / unmeasured dispatch) is skipped, not recorded
+        ctl.metrics.record_moe(float(m["moe_drop_rate"]),
+                               float(m["moe_imbalance"]))
         live["state"] = (params, opt)
         if hsrc is not None:
             hsrc.commit()            # step survived: batch delivered once
@@ -253,15 +256,23 @@ def main():
     dt = time.time() - t0
     mode = "random" if args.random else "dflop"
     snap = ctl.metrics.snapshot()
+
+    def fmt(key, scale=1.0, spec=".4f"):
+        # snapshot stats are None when their window is empty ("no data")
+        v = snap[key]
+        return "n/a" if v is None else f"{v * scale:{spec}}"
+
     print(f"[{mode}] {args.steps} steps in {dt:.1f}s; "
           f"loss {losses[0]:.3f} -> {np.mean(losses[-10:]):.3f}; "
           f"mean predicted C_max {np.mean(pred_cmax):.4f}s")
-    print(f"[runtime] imbalance={snap['imbalance_mean']:.4f}  "
-          f"sched_overhead={snap['sched_elapsed_mean_s'] * 1e3:.2f}ms  "
+    print(f"[runtime] imbalance={fmt('imbalance_mean')}  "
+          f"sched_overhead={fmt('sched_elapsed_mean_s', 1e3, '.2f')}ms  "
           f"drift_events={snap['n_drift_events']}  "
           f"replans={snap['n_replans']}  "
           f"physical_swaps={snap['n_physical_swaps']}  "
-          f"reshard_mean_s={snap['reshard_mean_s']:.4f}")
+          f"reshard_mean_s={fmt('reshard_mean_s')}  "
+          f"moe_drop={fmt('moe_drop_rate_mean')}  "
+          f"moe_imbalance={fmt('moe_imbalance_max')}")
     if fleet is not None:
         fl = snap["fleet"]
         print(f"[fleet] hosts={fleet.n_alive}/{fleet.n_hosts}  "
@@ -272,9 +283,9 @@ def main():
               f"committed={hsrc.n_committed}  aborted={hsrc.n_aborted}")
     if composer is not None:
         print(f"[compose] batches={snap['n_composed']}  "
-              f"pred_gain_mean={snap['compose_pred_gain_mean']:.3f}  "
+              f"pred_gain_mean={fmt('compose_pred_gain_mean', 1.0, '.3f')}  "
               f"forced_items={snap['n_forced_items']}  "
-              f"overhead={snap['compose_elapsed_mean_s'] * 1e3:.2f}ms")
+              f"overhead={fmt('compose_elapsed_mean_s', 1e3, '.2f')}ms")
     if args.trace:
         print(f"chrome trace written to {ctl.export_trace(args.trace)}")
     ctl.close()

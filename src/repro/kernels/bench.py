@@ -1,0 +1,211 @@
+"""Microbenchmark harness for the Pallas kernel tier (feeds fig23).
+
+Closes the predict↔measure loop at the kernel layer: every plan/schedule/
+composition decision is priced from the analytic tables in
+``core.profiling`` (HardwareSpec peak FLOPs × MXU utilization), but until
+now nothing compared those prices against what the kernels actually do.
+This module times forward and forward+backward executions of the three
+kernels across the profiler's pow2 shape buckets — the same
+``runtime.calibration.shape_bucket`` keys the scheduler corrects with —
+prices the identical shapes analytically, and can seed the measured ratios
+straight into ``OnlineCalibrator`` cells so the search prices modules from
+measured kernel time when a bench has run.
+
+Host-unit normalization: on a CPU container the kernels execute in Pallas
+interpret mode, ~1e6× slower than the TPU v5e the analytic tables price;
+on a real TPU the constant is ~1.  ``normalize`` therefore folds out one
+scalar *unit* per (kernel, direction) — the geomean of measured/analytic —
+so the per-bucket ratio validates *shape-scaling fidelity* (does doubling
+the sequence double the time the way the FLOP model says?), which is the
+property the planner's relative decisions depend on.  The unit itself is
+what a calibrator cell learns.
+"""
+from __future__ import annotations
+
+import math
+import time
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.profiling.analytic import V5E, HardwareSpec
+from repro.core.profiling.flops import TRAIN_MULT
+from repro.kernels import ops
+from repro.runtime.calibration import OnlineCalibrator, shape_bucket
+
+# ---------------------------------------------------------------------- #
+# Kernel-level FLOP counts (forward), consistent with core.profiling.flops
+# ---------------------------------------------------------------------- #
+def attention_flops(B: int, H: int, S: int, D: int, *, causal: bool) -> float:
+    """score + AV matmuls: 2·2·B·S·S·H·D, halved under causal masking —
+    the ``score_av`` term of ``flops._attn_layer``."""
+    f = 4.0 * B * S * S * H * D
+    return f * 0.5 if causal else f
+
+
+def mamba_flops(B: int, S: int, di: int, N: int) -> float:
+    """Selective-scan term of ``flops._mamba_layer``: 6·B·S·di·N."""
+    return 6.0 * B * S * di * N
+
+
+def rwkv6_flops(B: int, H: int, S: int, M: int) -> float:
+    """WKV recurrence term of ``flops._rwkv_layer`` with d = H·M:
+    6·B·S·(H·M)·M."""
+    return 6.0 * B * S * H * M * M
+
+
+def analytic_seconds(flops: float, hw: HardwareSpec = V5E) -> float:
+    """The tables' price for ``flops`` of kernel work on one chip."""
+    return flops / (hw.peak_flops * hw.base_mxu_util)
+
+
+# ---------------------------------------------------------------------- #
+# Timing
+# ---------------------------------------------------------------------- #
+def _time_fn(fn, *args, iters: int, warmup: int = 1) -> List[float]:
+    """Per-iteration wall times (s), after ``warmup`` compile/cache calls."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    out = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        out.append(time.perf_counter() - t0)
+    return out
+
+
+def _case_attention(S: int, *, B: int, KH: int, G: int, D: int, causal: bool):
+    key = jax.random.PRNGKey(S)
+    kq, kk, kv = jax.random.split(key, 3)
+    H = KH * G
+    q = jax.random.normal(kq, (B, S, H, D), jnp.float32)
+    k = jax.random.normal(kk, (B, S, KH, D), jnp.float32)
+    v = jax.random.normal(kv, (B, S, KH, D), jnp.float32)
+    seg = jnp.ones((B, S), jnp.int32)
+
+    def fwd(q, k, v):
+        return ops.packed_flash_attention(q, k, v, segment_ids=seg,
+                                          causal=causal)
+
+    return fwd, (q, k, v), attention_flops(B, H, S, D, causal=causal)
+
+
+def _case_mamba(S: int, *, B: int, di: int, N: int):
+    key = jax.random.PRNGKey(S + 1)
+    ks = jax.random.split(key, 6)
+    u = jax.random.normal(ks[0], (B, S, di), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, di)) - 1.0)
+    B_t = jax.random.normal(ks[2], (B, S, N), jnp.float32)
+    C_t = jax.random.normal(ks[3], (B, S, N), jnp.float32)
+    A = -jnp.exp(jax.random.normal(ks[4], (di, N)) * 0.5)
+    D = jax.random.normal(ks[5], (di,), jnp.float32)
+
+    def fwd(u, dt, B_t, C_t, A, D):
+        y, _ = ops.mamba_scan(u, dt, B_t, C_t, A, D)
+        return y
+
+    return fwd, (u, dt, B_t, C_t, A, D), mamba_flops(B, S, di, N)
+
+
+def _case_rwkv6(S: int, *, B: int, H: int, M: int):
+    key = jax.random.PRNGKey(S + 2)
+    ks = jax.random.split(key, 5)
+    r = jax.random.normal(ks[0], (B, S, H, M), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, H, M), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, H, M), jnp.float32)
+    w = jnp.exp(-jnp.exp(jax.random.normal(ks[3], (B, S, H, M)) * 0.5))
+    u = jax.random.normal(ks[4], (H, M), jnp.float32)
+
+    def fwd(r, k, v, w):
+        y, _ = ops.rwkv6_scan(r, k, v, w, u)
+        return y
+
+    return fwd, (r, k, v, w), rwkv6_flops(B, H, S, M)
+
+
+_CASES = {"attention": _case_attention, "mamba": _case_mamba,
+          "rwkv6": _case_rwkv6}
+
+# bench defaults: modest model dims so interpret-mode runs stay snappy;
+# the swept axis is the sequence length (the profiler's bucketed shape)
+DEFAULT_DIMS: Dict[str, dict] = {
+    "attention": dict(B=1, KH=2, G=2, D=64, causal=True),
+    "mamba": dict(B=1, di=128, N=16),
+    "rwkv6": dict(B=1, H=2, M=32),
+}
+
+
+def bench_kernel(kernel: str, seqs: Sequence[int], *, iters: int = 3,
+                 hw: HardwareSpec = V5E, dims: Optional[dict] = None
+                 ) -> List[dict]:
+    """Time fwd and fwd+bwd across ``seqs``; one row per (S, direction).
+
+    Rows carry the raw per-iteration times (``times_s``) so a calibrator
+    can be seeded with every observation, plus the analytic price of the
+    same shape (bwd priced at ``TRAIN_MULT − 1`` × fwd, the standard
+    backward ≈ 2× forward count the tables use)."""
+    case = _CASES[kernel]
+    dims = dict(DEFAULT_DIMS[kernel], **(dims or {}))
+    rows = []
+    for S in seqs:
+        fwd, args, f_fwd = case(int(S), **dims)
+
+        def fwdbwd(*a):
+            loss = lambda *aa: jnp.sum(fwd(*aa))        # noqa: E731
+            l, grads = jax.value_and_grad(loss, argnums=tuple(
+                range(len(a))))(*a)
+            return (l, grads)
+
+        for direction, fn, flops in (
+                ("fwd", fwd, f_fwd),
+                ("fwdbwd", fwdbwd, f_fwd * TRAIN_MULT)):
+            times = _time_fn(fn, *args, iters=iters)
+            rows.append({
+                "kernel": kernel,
+                "direction": direction,
+                "tokens": int(S),
+                "bucket": shape_bucket(float(S)),
+                "flops": flops,
+                "analytic_s": analytic_seconds(flops, hw),
+                "times_s": times,
+                "measured_s": float(sorted(times)[len(times) // 2]),
+            })
+    return rows
+
+
+def normalize(rows: List[dict]) -> List[dict]:
+    """Add the host unit (per-(kernel, direction) geomean measured/analytic)
+    and the unit-normalized ``ratio`` to every row, in place."""
+    groups: Dict[tuple, List[dict]] = {}
+    for r in rows:
+        groups.setdefault((r["kernel"], r["direction"]), []).append(r)
+    for grp in groups.values():
+        logs = [math.log(r["measured_s"] / r["analytic_s"]) for r in grp
+                if r["measured_s"] > 0 and r["analytic_s"] > 0]
+        unit = math.exp(sum(logs) / len(logs)) if logs else float("nan")
+        for r in grp:
+            r["unit"] = unit
+            denom = unit * r["analytic_s"]
+            r["ratio"] = r["measured_s"] / denom if denom > 0 else float("nan")
+    return rows
+
+
+def seed_calibrator(cal: OnlineCalibrator, rows: List[dict], *,
+                    module: str = "llm", tp: int = 1) -> int:
+    """Feed every benchmarked iteration into calibrator cells keyed exactly
+    like the scheduler's observations ((module, shape_bucket(tokens), tp);
+    the online scheduler names its decoder module "llm").  The *predicted*
+    side is the unit-normalized analytic price, so the learned cell ratio
+    is the same shape-residual the ratio rows report.  Returns the number
+    of observations fed; with ``iters ≥ 2`` each touched cell matures past
+    ``min_obs`` immediately."""
+    n = 0
+    for r in rows:
+        pred = r.get("unit", float("nan")) * r["analytic_s"]
+        if not (pred > 0):
+            continue
+        for t in r["times_s"]:
+            cal.observe(module, float(r["tokens"]), tp, pred, t)
+            n += 1
+    return n

@@ -28,7 +28,8 @@ def packed_flash_attention(q, k, v, *, segment_ids=None, causal=True,
     G = H // KH
     if segment_ids is None:
         segment_ids = jnp.zeros((B, S), jnp.int32)
-    qt = q.reshape(B, S, KH, G, D).transpose(1, 0, 2, 3, 4)  # staged below
+    # GQA convention: head h attends through kv head h // G — the
+    # (B, S, KH, G, D) reshape groups G consecutive query heads per kv head.
     qt = q.reshape(B, S, KH, G, D).transpose(0, 2, 3, 1, 4)  # (B,KH,G,S,D)
     kt = k.transpose(0, 2, 1, 3)                             # (B,KH,S,D)
     vt = v.transpose(0, 2, 1, 3)

@@ -1,8 +1,8 @@
-"""Packed flash attention — Pallas TPU kernel.
+"""Packed flash attention — Pallas TPU kernel, forward + custom VJP.
 
 The paper's sequence packing (§3.2.1) requires attention to "process each
-original instance separately to maintain causal integrity": this kernel
-fuses segment-id masking (packing boundaries), causality and an optional
+original instance separately to maintain causal integrity": these kernels
+fuse segment-id masking (packing boundaries), causality and an optional
 sliding window into an online-softmax flash attention with explicit VMEM
 tiling.
 
@@ -14,6 +14,18 @@ in VMEM scratch carried across kv steps.  Default (bq, bk) = (512, 512) —
 MXU-aligned multiples of 128 — keeps the working set
     q (G·bq·D) + k,v (2·bk·D) + acc (G·bq·D) + p (G·bq·bk)       [f32]
 at a few MiB, inside the 16 MiB v5e VMEM for G ≤ 8, D ≤ 256.
+
+Backward (FlashAttention-2 style, ``docs/kernels.md``): the forward also
+emits the per-row log-sum-exp; the backward recomputes the probabilities
+p = exp(s − lse) block-by-block from the saved (o, lse) residuals instead
+of storing the S² attention matrix, with the delta trick
+Δ = rowsum(dout ⊙ o) so ds = p·(dp − Δ)·scale.  Two kernels share the
+forward's masking: dq accumulates over kv blocks (same grid orientation as
+the forward), dk/dv accumulate over q blocks (grid (B, KH, nk, nq), the q
+axis innermost).  Non-multiple sequence lengths are padded to the block
+grid (``repro.kernels.blocking``); padded positions carry segment id −1 so
+the segment mask hides them, and the pad/slice transposes drop their
+cotangents.
 """
 from __future__ import annotations
 
@@ -24,12 +36,29 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.blocking import PAD_SEGMENT, pad_axis, pick_block
+
 NEG_INF = -1e30
 
 
-def _kernel(q_ref, k_ref, v_ref, seg_q_ref, seg_k_ref, o_ref,
-            m_scr, l_scr, acc_scr, *, scale: float, causal: bool,
-            window: int, nk: int, bq: int, bk: int):
+def _tile_mask(iq, ik, seg_q, seg_k, *, causal: bool, window: int,
+               bq: int, bk: int):
+    """Boolean (bq, bk) attend-mask for tile (iq, ik) — the ONE masking
+    definition all four kernels (fwd, dq, dkv) share."""
+    qpos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), dtype=jnp.bool_)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= qpos - kpos < window
+    mask &= seg_q[:, None] == seg_k[None, :]
+    return mask
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, seg_q_ref, seg_k_ref, o_ref, lse_ref,
+                m_scr, l_scr, acc_scr, *, scale: float, causal: bool,
+                window: int, nk: int, bq: int, bk: int):
     ik = pl.program_id(3)
     iq = pl.program_id(2)
 
@@ -45,22 +74,17 @@ def _kernel(q_ref, k_ref, v_ref, seg_q_ref, seg_k_ref, o_ref,
 
     s = jax.lax.dot_general(q, k, (((2,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32) * scale
-    qpos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
-    kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
-    mask = jnp.ones((bq, bk), dtype=jnp.bool_)
-    if causal:
-        mask &= kpos <= qpos
-    if window > 0:
-        mask &= qpos - kpos < window
-    seg_q = seg_q_ref[0]                             # (bq,)
-    seg_k = seg_k_ref[0]                             # (bk,)
-    mask &= seg_q[:, None] == seg_k[None, :]
+    mask = _tile_mask(iq, ik, seg_q_ref[0], seg_k_ref[0], causal=causal,
+                      window=window, bq=bq, bk=bk)
     s = jnp.where(mask[None], s, NEG_INF)            # (G, bq, bk)
 
     m_prev = m_scr[...]                              # (G, bq)
     m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
     corr = jnp.exp(m_prev - m_new)
-    p = jnp.exp(s - m_new[..., None])
+    # explicit mask select: on a row masked in every tile m_new stays at
+    # NEG_INF and exp(s - m_new) would be exp(0) = 1, silently averaging
+    # v; zeroed p keeps l at 0 so the finalize guard emits exact zeros
+    p = jnp.where(mask[None], jnp.exp(s - m_new[..., None]), 0.0)
     l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=-1)
     pv = jax.lax.dot_general(p, v, (((2,), (0,)), ((), ())),
                              preferred_element_type=jnp.float32)
@@ -73,29 +97,96 @@ def _kernel(q_ref, k_ref, v_ref, seg_q_ref, seg_k_ref, o_ref,
         out = acc_scr[...] / jnp.maximum(l, 1e-30)[..., None]
         out = jnp.where((l > 0)[..., None], out, 0.0)
         o_ref[0, 0] = out.astype(o_ref.dtype)
+        m = m_scr[...]
+        lse = jnp.where(l > 0, m + jnp.log(jnp.maximum(l, 1e-30)), NEG_INF)
+        lse_ref[0, 0] = lse
 
 
-def _pick(s: int, target: int) -> int:
-    b = min(s, target)
-    while s % b:
-        b -= 1
-    return b
+def _tile_p_ds(q, k, v, do, lse, delta, mask, *, scale: float):
+    """Recompute (p, ds) for one tile from the saved residuals.
+
+    s − lse ≤ 0 for every unmasked entry (lse = m + log l ≥ m), so the exp
+    cannot overflow; fully-masked rows have lse = NEG_INF and are zeroed by
+    the mask select."""
+    s = jax.lax.dot_general(q, k, (((2,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    s = jnp.where(mask[None], s, NEG_INF)            # (G, bq, bk)
+    p = jnp.exp(s - lse[..., None])
+    p = jnp.where(mask[None], p, 0.0)
+    dp = jax.lax.dot_general(do, v, (((2,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    ds = p * (dp - delta[..., None]) * scale
+    return p, ds
 
 
-@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
-                                             "block_k", "interpret"))
-def packed_flash_attention_bkgsd(q, k, v, seg_q, seg_k, *, causal: bool = True,
-                                 window: int = 0, block_q: int = 512,
-                                 block_k: int = 512, interpret: bool = False):
-    """q: (B, KH, G, Sq, D); k, v: (B, KH, Sk, D); seg_*: (B, S) int32.
-    Returns (B, KH, G, Sq, D)."""
+def _bwd_dq_kernel(q_ref, k_ref, v_ref, seg_q_ref, seg_k_ref, do_ref,
+                   lse_ref, delta_ref, dq_ref, dq_scr, *, scale: float,
+                   causal: bool, window: int, nk: int, bq: int, bk: int):
+    """dq = Σ_j ds_ij · k_j.  Grid (B, KH, nq, nk), kv innermost."""
+    ik = pl.program_id(3)
+    iq = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        dq_scr[...] = jnp.zeros_like(dq_scr)
+
+    mask = _tile_mask(iq, ik, seg_q_ref[0], seg_k_ref[0], causal=causal,
+                      window=window, bq=bq, bk=bk)
+    _, ds = _tile_p_ds(q_ref[0, 0].astype(jnp.float32),
+                       k_ref[0, 0].astype(jnp.float32),
+                       v_ref[0, 0].astype(jnp.float32),
+                       do_ref[0, 0].astype(jnp.float32),
+                       lse_ref[0, 0], delta_ref[0, 0], mask, scale=scale)
+    dq_scr[...] += jax.lax.dot_general(ds, k_ref[0, 0].astype(jnp.float32),
+                                       (((2,), (0,)), ((), ())),
+                                       preferred_element_type=jnp.float32)
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        dq_ref[0, 0] = dq_scr[...].astype(dq_ref.dtype)
+
+
+def _bwd_dkv_kernel(q_ref, k_ref, v_ref, seg_q_ref, seg_k_ref, do_ref,
+                    lse_ref, delta_ref, dk_ref, dv_ref, dk_scr, dv_scr, *,
+                    scale: float, causal: bool, window: int, nq: int,
+                    bq: int, bk: int):
+    """dk_j = Σ_i ds_ijᵀ q_i, dv_j = Σ_i p_ijᵀ do_i.
+    Grid (B, KH, nk, nq), the q axis innermost/sequential."""
+    iq = pl.program_id(3)
+    ik = pl.program_id(2)
+
+    @pl.when(iq == 0)
+    def _init():
+        dk_scr[...] = jnp.zeros_like(dk_scr)
+        dv_scr[...] = jnp.zeros_like(dv_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)              # (G, bq, D)
+    do = do_ref[0, 0].astype(jnp.float32)
+    mask = _tile_mask(iq, ik, seg_q_ref[0], seg_k_ref[0], causal=causal,
+                      window=window, bq=bq, bk=bk)
+    p, ds = _tile_p_ds(q, k_ref[0, 0].astype(jnp.float32),
+                       v_ref[0, 0].astype(jnp.float32), do,
+                       lse_ref[0, 0], delta_ref[0, 0], mask, scale=scale)
+    # contract the (G, bq) axes: (G,bq,bk) × (G,bq,D) -> (bk, D)
+    dv_scr[...] += jax.lax.dot_general(p, do, (((0, 1), (0, 1)), ((), ())),
+                                       preferred_element_type=jnp.float32)
+    dk_scr[...] += jax.lax.dot_general(ds, q, (((0, 1), (0, 1)), ((), ())),
+                                       preferred_element_type=jnp.float32)
+
+    @pl.when(iq == nq - 1)
+    def _finalize():
+        dk_ref[0, 0] = dk_scr[...].astype(dk_ref.dtype)
+        dv_ref[0, 0] = dv_scr[...].astype(dv_ref.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# pallas_call wrappers (shapes already padded to the block grid)
+# --------------------------------------------------------------------------- #
+def _fwd_call(q, k, v, seg_q, seg_k, causal, window, bq, bk, interpret):
     B, KH, G, Sq, D = q.shape
     Sk = k.shape[2]
-    bq, bk = _pick(Sq, block_q), _pick(Sk, block_k)
     nq, nk = Sq // bq, Sk // bk
-    scale = D ** -0.5
-
-    kernel = functools.partial(_kernel, scale=scale, causal=causal,
+    kernel = functools.partial(_fwd_kernel, scale=D ** -0.5, causal=causal,
                                window=window, nk=nk, bq=bq, bk=bk)
     return pl.pallas_call(
         kernel,
@@ -107,9 +198,14 @@ def packed_flash_attention_bkgsd(q, k, v, seg_q, seg_k, *, causal: bool = True,
             pl.BlockSpec((1, bq), lambda b, h, i, j: (b, i)),
             pl.BlockSpec((1, bk), lambda b, h, i, j: (b, j)),
         ],
-        out_specs=pl.BlockSpec((1, 1, G, bq, D),
-                               lambda b, h, i, j: (b, h, 0, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, KH, G, Sq, D), q.dtype),
+        out_specs=[
+            pl.BlockSpec((1, 1, G, bq, D), lambda b, h, i, j: (b, h, 0, i, 0)),
+            pl.BlockSpec((1, 1, G, bq), lambda b, h, i, j: (b, h, 0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, KH, G, Sq, D), q.dtype),
+            jax.ShapeDtypeStruct((B, KH, G, Sq), jnp.float32),
+        ],
         scratch_shapes=[
             pltpu.VMEM((G, bq), jnp.float32),
             pltpu.VMEM((G, bq), jnp.float32),
@@ -117,3 +213,98 @@ def packed_flash_attention_bkgsd(q, k, v, seg_q, seg_k, *, causal: bool = True,
         ],
         interpret=interpret,
     )(q, k, v, seg_q, seg_k)
+
+
+def _bwd_call(q, k, v, seg_q, seg_k, out, lse, dout, causal, window,
+              bq, bk, interpret):
+    B, KH, G, Sq, D = q.shape
+    Sk = k.shape[2]
+    nq, nk = Sq // bq, Sk // bk
+    scale = D ** -0.5
+    do32 = dout.astype(jnp.float32)
+    delta = jnp.sum(do32 * out.astype(jnp.float32), axis=-1)  # (B,KH,G,Sq)
+
+    q_spec = pl.BlockSpec((1, 1, G, bq, D), lambda b, h, i, j: (b, h, 0, i, 0))
+    row_spec = pl.BlockSpec((1, 1, G, bq), lambda b, h, i, j: (b, h, 0, i))
+    kv_spec = pl.BlockSpec((1, 1, bk, D), lambda b, h, i, j: (b, h, j, 0))
+    sq_spec = pl.BlockSpec((1, bq), lambda b, h, i, j: (b, i))
+    sk_spec = pl.BlockSpec((1, bk), lambda b, h, i, j: (b, j))
+
+    dq = pl.pallas_call(
+        functools.partial(_bwd_dq_kernel, scale=scale, causal=causal,
+                          window=window, nk=nk, bq=bq, bk=bk),
+        grid=(B, KH, nq, nk),
+        in_specs=[q_spec, kv_spec, kv_spec, sq_spec, sk_spec, q_spec,
+                  row_spec, row_spec],
+        out_specs=q_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KH, G, Sq, D), q.dtype),
+        scratch_shapes=[pltpu.VMEM((G, bq, D), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, seg_q, seg_k, dout, lse, delta)
+
+    # q axis innermost: same index maps, grid dims (j, i) swapped
+    q_spec2 = pl.BlockSpec((1, 1, G, bq, D), lambda b, h, j, i: (b, h, 0, i, 0))
+    row_spec2 = pl.BlockSpec((1, 1, G, bq), lambda b, h, j, i: (b, h, 0, i))
+    kv_spec2 = pl.BlockSpec((1, 1, bk, D), lambda b, h, j, i: (b, h, j, 0))
+    sq_spec2 = pl.BlockSpec((1, bq), lambda b, h, j, i: (b, i))
+    sk_spec2 = pl.BlockSpec((1, bk), lambda b, h, j, i: (b, j))
+    dk, dv = pl.pallas_call(
+        functools.partial(_bwd_dkv_kernel, scale=scale, causal=causal,
+                          window=window, nq=nq, bq=bq, bk=bk),
+        grid=(B, KH, nk, nq),
+        in_specs=[q_spec2, kv_spec2, kv_spec2, sq_spec2, sk_spec2, q_spec2,
+                  row_spec2, row_spec2],
+        out_specs=[kv_spec2, kv_spec2],
+        out_shape=[jax.ShapeDtypeStruct((B, KH, Sk, D), k.dtype),
+                   jax.ShapeDtypeStruct((B, KH, Sk, D), v.dtype)],
+        scratch_shapes=[pltpu.VMEM((bk, D), jnp.float32),
+                        pltpu.VMEM((bk, D), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, seg_q, seg_k, dout, lse, delta)
+    return dq, dk, dv
+
+
+# --------------------------------------------------------------------------- #
+# custom VJP (block sizes are static; shapes arrive pre-padded)
+# --------------------------------------------------------------------------- #
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8, 9))
+def _flash(q, k, v, seg_q, seg_k, causal, window, bq, bk, interpret):
+    out, _ = _fwd_call(q, k, v, seg_q, seg_k, causal, window, bq, bk,
+                       interpret)
+    return out
+
+
+def _flash_fwd_rule(q, k, v, seg_q, seg_k, causal, window, bq, bk, interpret):
+    out, lse = _fwd_call(q, k, v, seg_q, seg_k, causal, window, bq, bk,
+                         interpret)
+    return out, (q, k, v, seg_q, seg_k, out, lse)
+
+
+def _flash_bwd_rule(causal, window, bq, bk, interpret, res, dout):
+    q, k, v, seg_q, seg_k, out, lse = res
+    dq, dk, dv = _bwd_call(q, k, v, seg_q, seg_k, out, lse, dout, causal,
+                           window, bq, bk, interpret)
+    return dq, dk, dv, None, None
+
+
+_flash.defvjp(_flash_fwd_rule, _flash_bwd_rule)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def packed_flash_attention_bkgsd(q, k, v, seg_q, seg_k, *, causal: bool = True,
+                                 window: int = 0, block_q: int = 512,
+                                 block_k: int = 512, interpret: bool = False):
+    """q: (B, KH, G, Sq, D); k, v: (B, KH, Sk, D); seg_*: (B, S) int32.
+    Returns (B, KH, G, Sq, D).  Differentiable in (q, k, v)."""
+    B, KH, G, Sq, D = q.shape
+    Sk = k.shape[2]
+    bq, Sq_p = pick_block(Sq, block_q)
+    bk, Sk_p = pick_block(Sk, block_k)
+    q = pad_axis(q, Sq_p, axis=3)
+    seg_q = pad_axis(seg_q, Sq_p, axis=1, value=PAD_SEGMENT)
+    k = pad_axis(k, Sk_p, axis=2)
+    v = pad_axis(v, Sk_p, axis=2)
+    seg_k = pad_axis(seg_k, Sk_p, axis=1, value=PAD_SEGMENT)
+    out = _flash(q, k, v, seg_q, seg_k, causal, window, bq, bk, interpret)
+    return out[:, :, :, :Sq]

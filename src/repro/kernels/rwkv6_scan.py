@@ -1,4 +1,4 @@
-"""RWKV-6 WKV recurrence — chunked Pallas TPU kernel.
+"""RWKV-6 WKV recurrence — chunked Pallas TPU kernel, forward + custom VJP.
 
     S_t = diag(w_t)·S_{t-1} + k_t v_tᵀ
     y_t = r_t·(S_{t-1} + diag(u)·k_t v_tᵀ)
@@ -11,6 +11,22 @@ the O(M²) state update is VPU work on an (M, M) tile, M = 64 lanes wide.
 
 Inputs are pre-arranged (B, H, S, M); outputs match.  The final state
 (B, H, M, M) is emitted for decode hand-off.
+
+Backward (``docs/kernels.md``): the forward also emits each chunk's
+*initial* state (B, H, n_chunks, M, M); the backward walks chunks in
+reverse (index maps close over ``n_chunks − 1 − i``), replays the chunk
+into a (chunk, M, M) VMEM history of pre-states S_{t-1}, then runs the
+state-adjoint recurrence
+
+    G_{t-1} = diag(w_t)·G_t + r_t ŷ_tᵀ        (G carried across chunks)
+
+per step t descending — the final-state cotangent seeds G at the last
+chunk.  dr/dk/dv/dw are written in place; du is emitted as a per-batch
+partial (accumulating an output block is only safe across consecutive
+innermost-grid revisits) and summed over batch outside the kernel.
+Non-multiple lengths are padded (``repro.kernels.blocking``) with
+w = 1, r = k = v = 0, so a padded step passes the state through untouched
+and the emitted final state stays exact.
 """
 from __future__ import annotations
 
@@ -21,14 +37,18 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.blocking import pad_axis, pick_block
 
-def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, y_ref, s_out_ref, state_scr,
-            *, n_chunks: int, chunk: int):
+
+def _fwd_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, y_ref, s_out_ref,
+                sinit_ref, state_scr, *, n_chunks: int, chunk: int):
     ic = pl.program_id(2)
 
     @pl.when(ic == 0)
     def _init():
         state_scr[...] = jnp.zeros_like(state_scr)
+
+    sinit_ref[0, 0, 0] = state_scr[...]                # this chunk's S_{-1}
 
     u = u_ref[0].astype(jnp.float32)                   # (M,)
 
@@ -50,41 +70,157 @@ def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, y_ref, s_out_ref, state_scr,
         s_out_ref[0, 0] = state_scr[...]
 
 
-def _pick(s: int, target: int) -> int:
-    b = min(s, target)
-    while s % b:
-        b -= 1
-    return b
+def _bwd_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, sinit_ref, dy_ref, ds_ref,
+                dr_ref, dk_ref, dv_ref, dw_ref, du_ref, g_scr, hist_scr,
+                *, chunk: int):
+    """One reversed-order chunk of the WKV adjoint (see module docstring).
+
+    hist_scr[t] holds the replayed pre-state S_{t-1}; g_scr carries the
+    state adjoint G across (reversed) chunk iterations, seeded with the
+    final-state cotangent at the last chunk."""
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():                                       # last chunk first
+        g_scr[...] = ds_ref[0, 0].astype(jnp.float32)
+
+    u = u_ref[0].astype(jnp.float32)                   # (M,)
+
+    def replay(t, state):
+        hist_scr[t] = state
+        k_t = k_ref[0, 0, t].astype(jnp.float32)
+        v_t = v_ref[0, 0, t].astype(jnp.float32)
+        w_t = w_ref[0, 0, t].astype(jnp.float32)
+        return w_t[:, None] * state + k_t[:, None] * v_t[None, :]
+
+    jax.lax.fori_loop(0, chunk, replay, sinit_ref[0, 0, 0].astype(jnp.float32))
+
+    def bstep(s, carry):
+        g, du_acc = carry
+        t = chunk - 1 - s
+        r_t = r_ref[0, 0, t].astype(jnp.float32)
+        k_t = k_ref[0, 0, t].astype(jnp.float32)
+        v_t = v_ref[0, 0, t].astype(jnp.float32)
+        w_t = w_ref[0, 0, t].astype(jnp.float32)
+        dy_t = dy_ref[0, 0, t].astype(jnp.float32)     # (M,)
+        s_prev = hist_scr[t]                           # (M, M)
+        vdy = jnp.sum(v_t * dy_t)                      # scalar ⟨v_t, ŷ_t⟩
+        dw_ref[0, 0, t] = jnp.sum(g * s_prev, axis=1)
+        dk_ref[0, 0, t] = jnp.sum(g * v_t[None, :], axis=1) + u * r_t * vdy
+        dv_ref[0, 0, t] = (jnp.sum(g * k_t[:, None], axis=0)
+                           + jnp.sum(r_t * u * k_t) * dy_t)
+        dr_ref[0, 0, t] = (jnp.sum(s_prev * dy_t[None, :], axis=1)
+                           + u * k_t * vdy)
+        du_acc = du_acc + r_t * k_t * vdy
+        g = w_t[:, None] * g + r_t[:, None] * dy_t[None, :]
+        return g, du_acc
+
+    g, du_acc = jax.lax.fori_loop(
+        0, chunk, bstep, (g_scr[...], jnp.zeros_like(u)))
+    g_scr[...] = g
+
+    @pl.when(ic == 0)
+    def _first():
+        du_ref[0, 0] = du_acc
+
+    @pl.when(ic > 0)
+    def _rest():
+        du_ref[0, 0] += du_acc
+
+
+def _fwd_call(r, k, v, w, u, c, interpret):
+    B, H, S, M = r.shape
+    n_chunks = S // c
+    seq_spec = pl.BlockSpec((1, 1, c, M), lambda b, h, i: (b, h, i, 0))
+    return pl.pallas_call(
+        functools.partial(_fwd_kernel, n_chunks=n_chunks, chunk=c),
+        grid=(B, H, n_chunks),
+        in_specs=[seq_spec, seq_spec, seq_spec, seq_spec,
+                  pl.BlockSpec((1, M), lambda b, h, i: (h, 0))],
+        out_specs=[
+            seq_spec,
+            pl.BlockSpec((1, 1, M, M), lambda b, h, i: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, 1, M, M), lambda b, h, i: (b, h, i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, S, M), r.dtype),
+            jax.ShapeDtypeStruct((B, H, M, M), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, n_chunks, M, M), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((M, M), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u)
+
+
+def _bwd_call(r, k, v, w, u, s_init, dy, ds, c, interpret):
+    B, H, S, M = r.shape
+    n_chunks = S // c
+    rev = n_chunks - 1                                 # reversed chunk walk
+    f32 = jnp.float32
+    seq_spec = pl.BlockSpec((1, 1, c, M), lambda b, h, i: (b, h, rev - i, 0))
+    return pl.pallas_call(
+        functools.partial(_bwd_kernel, chunk=c),
+        grid=(B, H, n_chunks),
+        in_specs=[
+            seq_spec, seq_spec, seq_spec, seq_spec,
+            pl.BlockSpec((1, M), lambda b, h, i: (h, 0)),
+            pl.BlockSpec((1, 1, 1, M, M), lambda b, h, i: (b, h, rev - i, 0, 0)),
+            seq_spec,
+            pl.BlockSpec((1, 1, M, M), lambda b, h, i: (b, h, 0, 0)),
+        ],
+        out_specs=[
+            seq_spec, seq_spec, seq_spec, seq_spec,
+            pl.BlockSpec((1, 1, M), lambda b, h, i: (b, h, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, S, M), f32),   # dr
+            jax.ShapeDtypeStruct((B, H, S, M), f32),   # dk
+            jax.ShapeDtypeStruct((B, H, S, M), f32),   # dv
+            jax.ShapeDtypeStruct((B, H, S, M), f32),   # dw
+            jax.ShapeDtypeStruct((B, H, M), f32),      # du partial (per-B)
+        ],
+        scratch_shapes=[pltpu.VMEM((M, M), jnp.float32),
+                        pltpu.VMEM((c, M, M), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u, s_init, dy, ds)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6))
+def _scan(r, k, v, w, u, c, interpret):
+    y, s_final, _ = _fwd_call(r, k, v, w, u, c, interpret)
+    return y, s_final
+
+
+def _scan_fwd_rule(r, k, v, w, u, c, interpret):
+    y, s_final, s_init = _fwd_call(r, k, v, w, u, c, interpret)
+    return (y, s_final), (r, k, v, w, u, s_init)
+
+
+def _scan_bwd_rule(c, interpret, res, cts):
+    r, k, v, w, u, s_init = res
+    dy, ds = cts
+    dr, dk, dv, dw, du_p = _bwd_call(r, k, v, w, u, s_init, dy, ds, c,
+                                     interpret)
+    return (dr.astype(r.dtype), dk.astype(k.dtype), dv.astype(v.dtype),
+            dw.astype(w.dtype), jnp.sum(du_p, axis=0).astype(u.dtype))
+
+
+_scan.defvjp(_scan_fwd_rule, _scan_bwd_rule)
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
 def rwkv6_scan_bhsm(r, k, v, w, u, *, chunk: int = 128,
                     interpret: bool = False):
     """r,k,v,w: (B, H, S, M); u: (H, M).
-    Returns y: (B, H, S, M), final state (B, H, M, M) f32."""
+    Returns y: (B, H, S, M), final state (B, H, M, M) f32.
+    Differentiable in every array input."""
     B, H, S, M = r.shape
-    c = _pick(S, chunk)
-    n_chunks = S // c
-    kernel = functools.partial(_kernel, n_chunks=n_chunks, chunk=c)
-    y, s_final = pl.pallas_call(
-        kernel,
-        grid=(B, H, n_chunks),
-        in_specs=[
-            pl.BlockSpec((1, 1, c, M), lambda b, h, i: (b, h, i, 0)),
-            pl.BlockSpec((1, 1, c, M), lambda b, h, i: (b, h, i, 0)),
-            pl.BlockSpec((1, 1, c, M), lambda b, h, i: (b, h, i, 0)),
-            pl.BlockSpec((1, 1, c, M), lambda b, h, i: (b, h, i, 0)),
-            pl.BlockSpec((1, M), lambda b, h, i: (h, 0)),
-        ],
-        out_specs=[
-            pl.BlockSpec((1, 1, c, M), lambda b, h, i: (b, h, i, 0)),
-            pl.BlockSpec((1, 1, M, M), lambda b, h, i: (b, h, 0, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((B, H, S, M), r.dtype),
-            jax.ShapeDtypeStruct((B, H, M, M), jnp.float32),
-        ],
-        scratch_shapes=[pltpu.VMEM((M, M), jnp.float32)],
-        interpret=interpret,
-    )(r, k, v, w, u)
-    return y, s_final
+    c, S_p = pick_block(S, chunk)
+    # w = 1, k = v = 0 on the pad: the state passes through untouched, so
+    # the emitted final state is exact and padded y rows are zero.
+    r = pad_axis(r, S_p, axis=2)
+    k = pad_axis(k, S_p, axis=2)
+    v = pad_axis(v, S_p, axis=2)
+    w = pad_axis(w, S_p, axis=2, value=1.0)
+    y, s_final = _scan(r, k, v, w, u, c, interpret)
+    return y[:, :, :S], s_final

@@ -280,7 +280,7 @@ def attend_cache(q, cache_k, cache_v, kpos, pos, *, window=0, scale=None):
     scale = scale if scale is not None else D ** -0.5
     qg = q.reshape(B, Kh, G, D).astype(cache_k.dtype)
     s = jnp.einsum("bkgd,bskd->bkgs", qg, cache_k).astype(jnp.float32) * scale
-    pos_b = jnp.reshape(jnp.asarray(pos, jnp.int32), (-1,))[:, None]  # (B|1,1)
+    pos_b = check_decode_pos(pos, B)[:, None]                       # (B, 1)
     valid = (kpos >= 0) & (kpos <= pos_b)
     if window and window > 0:
         valid &= pos_b - kpos < window
@@ -321,13 +321,27 @@ def kv_cache_bytes(cfg: ModelConfig, seq_len: int,
         * bytes_per_value * seq_len
 
 
+def check_decode_pos(pos, B: int):
+    """Enforce the decode-position contract: a scalar (all rows advance in
+    lockstep) or a ``(B,)`` vector of per-row positions (continuous
+    batching).  Returns the ``(B,)`` int32 form; any other shape raises —
+    silently broadcasting e.g. a ``(B, 1)`` or wrong-batch array would
+    write KV rows at the wrong slots with no error."""
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim == 0:
+        return jnp.broadcast_to(pos, (B,))
+    if pos.shape != (B,):
+        raise ValueError(
+            f"decode_pos must be a scalar or shape ({B},), got {pos.shape}")
+    return pos
+
+
 def cache_write(cache, k_new, v_new, pos):
     """Write one token (k_new: (B,1,Kh,D)) at each row's ring slot
     ``pos % C``.  ``pos``: scalar (all rows in lockstep) or ``(B,)``
     per-row positions (continuous batching)."""
     B, C = cache["k"].shape[0], cache["k"].shape[1]
-    pos_b = jnp.broadcast_to(
-        jnp.reshape(jnp.asarray(pos, jnp.int32), (-1,)), (B,))
+    pos_b = check_decode_pos(pos, B)
     slot = pos_b % C
     rows = jnp.arange(B)
     return {
@@ -357,13 +371,10 @@ def apply(params, x, cfg: ModelConfig, *, positions=None, segment_ids=None,
     v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(x.dtype))
 
     if cache is not None:
-        pos = decode_pos
+        pos = check_decode_pos(decode_pos, B)
         if cfg.use_rope:
-            # pos: scalar or (B,) per-row decode positions
-            p = jnp.broadcast_to(
-                jnp.reshape(jnp.asarray(pos), (-1, 1)), (B, 1))
-            q = apply_rope(q, p, cfg.rope_theta)
-            k = apply_rope(k, p, cfg.rope_theta)
+            q = apply_rope(q, pos[:, None], cfg.rope_theta)
+            k = apply_rope(k, pos[:, None], cfg.rope_theta)
         cache = cache_write(cache, k, v, pos)
         out = attend_cache(q, cache["k"], cache["v"], cache["kpos"], pos,
                            window=window)

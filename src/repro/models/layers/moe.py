@@ -55,6 +55,15 @@ def _route(params, x2d, cfg: ModelConfig):
     return top_w, top_e, lb_loss
 
 
+def _load_imbalance(top_e, E: int):
+    """Expert-load imbalance: ``E · max_e(f_e) − 1`` over the routed
+    assignment fractions f (0 = perfectly uniform, E − 1 = one expert takes
+    everything).  Same f as the Switch lb loss, so the two agree on what
+    "load" means."""
+    f = jnp.mean(jax.nn.one_hot(top_e, E, dtype=jnp.float32), axis=(0, 1))
+    return E * jnp.max(f) - 1.0
+
+
 def _expert_ffn(params, xe, cfg: ModelConfig):
     """xe: (E, C, d) -> (E, C, d), batched over experts."""
     up = jnp.einsum("ecd,edf->ecf", xe, params["w_up"].astype(xe.dtype))
@@ -66,7 +75,7 @@ def _expert_ffn(params, xe, cfg: ModelConfig):
     return jnp.einsum("ecf,efd->ecd", h, params["w_down"].astype(xe.dtype))
 
 
-def apply_dense(params, x, cfg: ModelConfig):
+def apply_dense(params, x, cfg: ModelConfig, *, with_stats: bool = False):
     """Oracle path: (B,S,d) -> (B,S,d), every expert sees every token."""
     B, S, d = x.shape
     x2d = x.reshape(B * S, d)
@@ -76,12 +85,22 @@ def apply_dense(params, x, cfg: ModelConfig):
     combine = jnp.zeros((B * S, cfg.n_experts), jnp.float32)
     combine = combine.at[jnp.arange(B * S)[:, None], top_e].add(top_w)
     y = jnp.einsum("te,etd->td", combine.astype(x.dtype), y_all)
+    if with_stats:
+        stats = {"drop_rate": jnp.zeros((), jnp.float32),   # dense never drops
+                 "imbalance": _load_imbalance(top_e, cfg.n_experts)}
+        return y.reshape(B, S, d), lb_loss, stats
     return y.reshape(B, S, d), lb_loss
 
 
 def apply_capacity(params, x, cfg: ModelConfig, *, capacity_factor: float = 1.25,
-                   constrain: Optional[Callable] = None):
-    """Scatter/gather dispatch with fixed per-expert capacity."""
+                   constrain: Optional[Callable] = None,
+                   with_stats: bool = False):
+    """Scatter/gather dispatch with fixed per-expert capacity.
+
+    With ``with_stats`` also returns {"drop_rate", "imbalance"} — the
+    fraction of (token, expert) assignments silently zeroed by the capacity
+    clip, and the routed-load skew (``_load_imbalance``), the two
+    quantities the duration model needs to price MoE layers."""
     B, S, d = x.shape
     T, E, k = B * S, cfg.n_experts, cfg.top_k
     x2d = x.reshape(T, d)
@@ -108,12 +127,18 @@ def apply_capacity(params, x, cfg: ModelConfig, *, capacity_factor: float = 1.25
         ye = constrain(ye)
     y = jnp.zeros((T, d), x.dtype)
     y = y.at[flat_t].add(ye[flat_e, slot] * flat_w[:, None].astype(x.dtype))
+    if with_stats:
+        stats = {
+            "drop_rate": 1.0 - jnp.sum(keep.astype(jnp.float32)) / (T * k),
+            "imbalance": _load_imbalance(top_e, E),
+        }
+        return y.reshape(B, S, d), lb_loss, stats
     return y.reshape(B, S, d), lb_loss
 
 
 def apply_capacity_chunked(params, x, cfg: ModelConfig, *,
                            capacity_factor: float = 1.25, constrain=None,
-                           chunk_tokens: int = 8192):
+                           chunk_tokens: int = 8192, with_stats: bool = False):
     """Token-chunked dispatch: bounds the (T·k, d) gather/scatter working set
     (which XLA otherwise materializes replicated) to one chunk; each chunk is
     checkpointed so backward recomputes instead of saving chunk residuals."""
@@ -126,18 +151,32 @@ def apply_capacity_chunked(params, x, cfg: ModelConfig, *,
     if n_chunks == 1:
         return apply_capacity(params, x, cfg,
                               capacity_factor=capacity_factor,
-                              constrain=constrain)
+                              constrain=constrain, with_stats=with_stats)
     x2d = x.reshape(n_chunks, 1, c, d)
+    zero = jnp.zeros((), jnp.float32)
 
     def chunk_fn(carry, xc):
+        lb_c, drop_c, imb_c = carry
+        if with_stats:
+            y, lb, st = apply_capacity(params, xc, cfg,
+                                       capacity_factor=capacity_factor,
+                                       constrain=constrain, with_stats=True)
+            return (lb_c + lb, drop_c + st["drop_rate"],
+                    jnp.maximum(imb_c, st["imbalance"])), y
         y, lb = apply_capacity(params, xc, cfg,
                                capacity_factor=capacity_factor,
                                constrain=constrain)
-        return carry + lb, y
+        return (lb_c + lb, drop_c, imb_c), y
 
     body = jax.checkpoint(chunk_fn, prevent_cse=False)
-    lb, ys = jax.lax.scan(body, jnp.zeros((), jnp.float32), x2d)
-    return ys.reshape(B, S, d), lb / n_chunks
+    (lb, drop, imb), ys = jax.lax.scan(body, (zero, zero, zero), x2d)
+    y = ys.reshape(B, S, d)
+    if with_stats:
+        # mean drop over chunks; worst-chunk imbalance (that's the chunk
+        # whose expert matmul is the straggler)
+        return y, lb / n_chunks, {"drop_rate": drop / n_chunks,
+                                  "imbalance": imb}
+    return y, lb / n_chunks
 
 
 def apply_ep_shard_map(params, x, cfg: ModelConfig, shard_ctx, *,
@@ -285,19 +324,27 @@ def _apply_tp_shard_map(params, x, cfg: ModelConfig, shard_ctx, *,
 
 def apply(params, x, cfg: ModelConfig, *, impl: str = "capacity",
           capacity_factor: float = 1.25, constrain=None,
-          chunk_tokens: int = 0, shard_ctx=None):
+          chunk_tokens: int = 0, shard_ctx=None, with_stats: bool = False):
+    """Dispatch to a MoE path; ``with_stats`` appends a
+    {"drop_rate", "imbalance"} dict to the (y, lb) return.  The shard_map
+    paths don't measure their (per-shard) dispatch — their stats are NaN,
+    never a fake 0.0 (the RuntimeMetrics convention)."""
     if impl == "dense":
-        return apply_dense(params, x, cfg)
+        return apply_dense(params, x, cfg, with_stats=with_stats)
     if impl == "ep" and shard_ctx is not None:
         out = apply_ep_shard_map(params, x, cfg, shard_ctx,
                                  capacity_factor=capacity_factor)
         if out is not None:
+            if with_stats:
+                nan = jnp.full((), jnp.nan, jnp.float32)
+                return out[0], out[1], {"drop_rate": nan, "imbalance": nan}
             return out
         # experts don't divide the model axes: fall through
     if chunk_tokens:
         return apply_capacity_chunked(params, x, cfg,
                                       capacity_factor=capacity_factor,
                                       constrain=constrain,
-                                      chunk_tokens=chunk_tokens)
+                                      chunk_tokens=chunk_tokens,
+                                      with_stats=with_stats)
     return apply_capacity(params, x, cfg, capacity_factor=capacity_factor,
-                          constrain=constrain)
+                          constrain=constrain, with_stats=with_stats)

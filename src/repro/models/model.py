@@ -76,7 +76,11 @@ def _layer_init(key, cfg: ModelConfig, kind: LayerKind, ffn_kind: FFNKind,
 
 def _layer_apply(lp, x, cfg: ModelConfig, kind: LayerKind, ffn_kind: FFNKind,
                  ctx: FwdCtx, cache, positions, segment_ids):
+    """Returns (x, new_cache, lb, moe_stats); moe_stats is None for
+    non-MoE layers and a (drop_rate, imbalance) pair (possibly NaN —
+    shard_map dispatch doesn't measure) for MoE layers."""
     lb = jnp.zeros((), jnp.float32)
+    moe_stats = None
     h = norms.rms_apply(lp["ln1"], x, cfg.norm_eps)
     if kind == LayerKind.ATTENTION:
         attn_cache = cache.get("attn") if cache else None
@@ -106,20 +110,22 @@ def _layer_apply(lp, x, cfg: ModelConfig, kind: LayerKind, ffn_kind: FFNKind,
         h2 = norms.rms_apply(lp["ln2"], x, cfg.norm_eps)
         y2, new_r2 = rwkv6.channel_mix(lp["rwkv"], h2, cfg, cache=new_r)
         new_cache = {"rwkv": new_r2} if cache else None
-        return x + y2, new_cache, lb
+        return x + y2, new_cache, lb, moe_stats
     else:
         raise ValueError(kind)
     x = x + y
     h2 = norms.rms_apply(lp["ln2"], x, cfg.norm_eps)
     if ffn_kind == FFNKind.MOE:
-        y2, lb = moe.apply(lp["moe"], h2, cfg, impl=ctx.moe_impl,
-                           capacity_factor=ctx.capacity_factor,
-                           constrain=ctx.moe_constrain,
-                           chunk_tokens=ctx.moe_chunk_tokens,
-                           shard_ctx=ctx.shard_ctx)
+        y2, lb, st = moe.apply(lp["moe"], h2, cfg, impl=ctx.moe_impl,
+                               capacity_factor=ctx.capacity_factor,
+                               constrain=ctx.moe_constrain,
+                               chunk_tokens=ctx.moe_chunk_tokens,
+                               shard_ctx=ctx.shard_ctx, with_stats=True)
+        moe_stats = (jax.lax.stop_gradient(st["drop_rate"]),
+                     jax.lax.stop_gradient(st["imbalance"]))
     else:
         y2 = ffn.apply(lp["ffn"], h2, cfg)
-    return x + y2, new_cache, lb
+    return x + y2, new_cache, lb, moe_stats
 
 
 # --------------------------------------------------------------------------- #
@@ -201,7 +207,7 @@ def forward(params, cfg: ModelConfig, *, tokens=None, embeds=None,
     kinds, ffns = cfg.layer_kinds, cfg.ffn_kinds
 
     def block_body(carry, xs):
-        x, lb = carry
+        x, lb, drop, imb = carry
         bp, bc = xs
         if ctx.hidden_constrain is not None:
             # anchor the activation layout every block: stops SPMD sharding
@@ -219,18 +225,25 @@ def forward(params, cfg: ModelConfig, *, tokens=None, embeds=None,
                 # weights live).  Its VJP reduce-scatters dW.
                 lp = ctx.block_constrain(lp, j)
 
-            x, nc, l = _layer_apply(lp, x, cfg, kinds[j], ffns[j],
-                                    ctx, cache_j, positions, segment_ids)
+            x, nc, l, st = _layer_apply(lp, x, cfg, kinds[j], ffns[j],
+                                        ctx, cache_j, positions, segment_ids)
             if new_bc is not None:
                 new_bc[f"pos{j}"] = nc
             lb = lb + l
-        return (x, lb), new_bc
+            if st is not None:
+                # mean drop across MoE layers; worst-layer imbalance (the
+                # straggler expert matmul).  NaN (shard_map: unmeasured)
+                # propagates through both — never coerced to 0.0.
+                drop = drop + st[0]
+                imb = jnp.maximum(imb, st[1])
+        return (x, lb, drop, imb), new_bc
 
     body = block_body
     if ctx.mode == "train" and cfg.remat and ctx.remat:
         body = jax.checkpoint(block_body, prevent_cse=False)
 
-    lb0 = jnp.zeros((), jnp.float32)
+    zero = jnp.zeros((), jnp.float32)
+    carry0 = (x, zero, zero, zero)       # (x, lb, moe drop sum, moe imb max)
     n_blocks = cfg.n_layers // period
     if cfg.scan_layers and caches is not None and ctx.mode == "decode":
         # decode: keep the stacked caches in the scan CARRY and update the
@@ -242,34 +255,42 @@ def forward(params, cfg: ModelConfig, *, tokens=None, embeds=None,
             bc = jax.tree.map(
                 lambda a: jax.lax.dynamic_index_in_dim(a, i, 0, keepdims=False),
                 caches_all)
-            (x_new, lb_new), new_bc = body(x_lb, (bp, bc))
+            new_x_lb, new_bc = body(x_lb, (bp, bc))
             caches_all = jax.tree.map(
                 lambda a, nc: jax.lax.dynamic_update_index_in_dim(
                     a, nc.astype(a.dtype), i, 0),
                 caches_all, new_bc)
-            return ((x_new, lb_new), caches_all), None
+            return (new_x_lb, caches_all), None
 
-        ((x, lb), new_caches), _ = jax.lax.scan(
-            decode_body, ((x, lb0), caches),
+        ((x, lb, drop, imb), new_caches), _ = jax.lax.scan(
+            decode_body, (carry0, caches),
             (params["blocks"], jnp.arange(n_blocks)))
     elif cfg.scan_layers:
-        (x, lb), new_caches = jax.lax.scan(
-            body, (x, lb0), (params["blocks"], caches))
+        (x, lb, drop, imb), new_caches = jax.lax.scan(
+            body, carry0, (params["blocks"], caches))
     else:
         new_list = []
-        lb = lb0
+        carry = carry0
         for b in range(n_blocks):
             bp = jax.tree.map(lambda a: a[b], params["blocks"])
             bc = jax.tree.map(lambda a: a[b], caches) if caches is not None else None
-            (x, lb), nc = body((x, lb), (bp, bc))
+            carry, nc = body(carry, (bp, bc))
             new_list.append(nc)
+        x, lb, drop, imb = carry
         new_caches = None
         if caches is not None:
             new_caches = jax.tree.map(lambda *xs: jnp.stack(xs), *new_list)
 
     x = norms.rms_apply(params["final_norm"], x, cfg.norm_eps)
     n_moe_layers = sum(1 for f in ffns if f == FFNKind.MOE)
-    aux = {"lb_loss": lb / max(1, n_moe_layers)}
+    total_moe = n_moe_layers * n_blocks         # MoE applications per forward
+    nan = jnp.full((), jnp.nan, jnp.float32)
+    aux = {
+        "lb_loss": lb / max(1, n_moe_layers),
+        # NaN (not 0.0) when the model has no MoE layers at all
+        "moe_drop_rate": drop / total_moe if total_moe else nan,
+        "moe_imbalance": imb if total_moe else nan,
+    }
     if ctx.return_hidden or not (cfg.has_lm_head and cfg.vocab_size > 0):
         return x, new_caches, aux
     if cfg.tie_embeddings:

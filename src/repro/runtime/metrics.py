@@ -94,6 +94,12 @@ class RuntimeMetrics:
         self.n_composed = 0
         self.n_forced_items = 0
         self.n_truncated_tokens = 0
+        # -- MoE dispatch (models/layers/moe.py capacity paths) --------- #
+        # NaN observations (no MoE layers / unmeasured shard_map dispatch)
+        # are skipped at record time; an all-NaN run leaves the windows
+        # empty, so the snapshot reports None rather than a fake 0.0.
+        self.moe_drop_rate = RollingStat(window)
+        self.moe_imbalance = RollingStat(window)
         # -- serving (repro.serve.engine) ------------------------------- #
         # latency/ttft keep a wider window: p99 over 256 samples is noise
         self.queue_depth = RollingStat(window)
@@ -172,6 +178,18 @@ class RuntimeMetrics:
         self.n_composed += 1
         self.n_forced_items += stats.n_forced
 
+    def record_moe(self, drop_rate: float, imbalance: float) -> None:
+        """Per-step MoE dispatch stats from the train step's aux
+        (``moe_drop_rate`` / ``moe_imbalance``): the fraction of routed
+        (token, expert) assignments dropped by the capacity clip, and the
+        expert-load skew ``E·max(f) − 1``.  NaN means "not measured"
+        (no MoE layers, or shard_map dispatch) and is not recorded —
+        the window must never mistake missing data for perfect balance."""
+        if not np.isnan(drop_rate):
+            self.moe_drop_rate.add(drop_rate)
+        if not np.isnan(imbalance):
+            self.moe_imbalance.add(imbalance)
+
     def record_pack(self, truncated: int) -> None:
         """Per-global-batch truncated-token count from the packing path —
         silent truncation is a correctness smell, so it is first-class in
@@ -228,6 +246,10 @@ class RuntimeMetrics:
             "compose_pred_gain_mean": _n(self.compose_pred_gain.mean()),
             "truncated_tokens_mean": _n(self.truncated_tokens.mean()),
             "reshard_mean_s": _n(self.reshard_s.mean()),
+            "moe_drop_rate_mean": _n(self.moe_drop_rate.mean()),
+            "moe_drop_rate_last": _n(self.moe_drop_rate.last()),
+            "moe_imbalance_mean": _n(self.moe_imbalance.mean()),
+            "moe_imbalance_max": _n(self.moe_imbalance.max()),
             "imbalance_mean": _n(self.imbalance.mean()),
             "imbalance_last": _n(self.imbalance.last()),
             "sched_elapsed_mean_s": _n(self.sched_elapsed_s.mean()),

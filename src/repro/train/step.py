@@ -35,14 +35,22 @@ def _head_weight(cfg, params):
 
 def make_loss_fn(desc: ModelDesc, ctx: Optional[FwdCtx] = None,
                  communicator=None, vocab_ce: Optional[Callable] = None,
-                 enc_ctx: Optional[FwdCtx] = None) -> Callable:
+                 enc_ctx: Optional[FwdCtx] = None,
+                 with_aux: bool = False) -> Callable:
     """vocab_ce: optional vocab-parallel CE `ce(w, h, labels)` — when given,
     the forward returns hidden states and the head+CE run sharded
-    (repro.sharding.vocab_ce)."""
+    (repro.sharding.vocab_ce).  With ``with_aux`` the loss fn returns
+    (loss, aux) for ``jax.value_and_grad(..., has_aux=True)`` so the train
+    step can surface the forward's observability aux (MoE drop rate /
+    imbalance) without a second forward."""
     ctx = ctx or FwdCtx(mode="train")
     if vocab_ce is not None:
         import dataclasses
         ctx = dataclasses.replace(ctx, return_hidden=True)
+
+    def finish(ce, aux):
+        loss = ce + LB_LOSS_WEIGHT * aux["lb_loss"]
+        return (loss, aux) if with_aux else loss
 
     if isinstance(desc, MLLMConfig):
         def loss_fn(params, mb):
@@ -56,7 +64,7 @@ def make_loss_fn(desc: ModelDesc, ctx: Optional[FwdCtx] = None,
                 ce = vocab_ce(w, logits, mb["labels"])
             else:
                 ce = cross_entropy(logits, mb["labels"])
-            return ce + LB_LOSS_WEIGHT * aux["lb_loss"]
+            return finish(ce, aux)
         return loss_fn
 
     if desc.input_embed_dim > 0:
@@ -70,7 +78,7 @@ def make_loss_fn(desc: ModelDesc, ctx: Optional[FwdCtx] = None,
                 ce = vocab_ce(w, out, mb["labels"])
             else:
                 ce = cross_entropy(out, mb["labels"])
-            return ce + LB_LOSS_WEIGHT * aux["lb_loss"]
+            return finish(ce, aux)
         return loss_fn
 
     def loss_fn(params, mb):
@@ -83,7 +91,7 @@ def make_loss_fn(desc: ModelDesc, ctx: Optional[FwdCtx] = None,
             ce = vocab_ce(w, out, mb["labels"])
         else:
             ce = cross_entropy(out, mb["labels"])
-        return ce + LB_LOSS_WEIGHT * aux["lb_loss"]
+        return finish(ce, aux)
     return loss_fn
 
 
@@ -96,25 +104,32 @@ def make_train_step(desc: ModelDesc, opt_cfg: AdamWConfig,
 
     `batch` leaves carry a leading (N_mb,) microbatch axis."""
     loss_fn = make_loss_fn(desc, ctx, communicator, vocab_ce=vocab_ce,
-                           enc_ctx=enc_ctx)
+                           enc_ctx=enc_ctx, with_aux=True)
 
     def train_step(params, opt_state, batch, lr):
         n_mb = jax.tree_util.tree_leaves(batch)[0].shape[0]
+        zero = jnp.zeros((), jnp.float32)
 
         def mb_step(carry, mb):
-            loss_sum, grads = carry
-            l, g = jax.value_and_grad(loss_fn)(params, mb)
+            loss_sum, drop_sum, imb_max, grads = carry
+            (l, aux), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
             grads = jax.tree.map(
                 lambda a, b: a + b.astype(jnp.float32), grads, g)
-            return (loss_sum + l, grads), None
+            drop_sum = drop_sum + aux["moe_drop_rate"]
+            imb_max = jnp.maximum(imb_max, aux["moe_imbalance"])
+            return (loss_sum + l, drop_sum, imb_max, grads), None
 
-        init = (jnp.zeros((), jnp.float32),
+        init = (zero, zero, zero,
                 jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params))
-        (loss_sum, grads), _ = jax.lax.scan(mb_step, init, batch)
+        (loss_sum, drop_sum, imb_max, grads), _ = jax.lax.scan(
+            mb_step, init, batch)
         grads = jax.tree.map(lambda g: g / n_mb, grads)
         new_params, new_opt = adamw_update(opt_cfg, params, grads, opt_state,
                                            lr=lr)
-        metrics = {"loss": loss_sum / n_mb}
+        # NaN-preserving aggregates (no-MoE models report NaN, never 0.0)
+        metrics = {"loss": loss_sum / n_mb,
+                   "moe_drop_rate": drop_sum / n_mb,
+                   "moe_imbalance": imb_max}
         return new_params, new_opt, metrics
 
     return train_step

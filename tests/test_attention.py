@@ -78,3 +78,41 @@ def test_flash_no_quadratic_residuals():
             assert not (leaf.ndim >= 2 and leaf.shape[-1] == S
                         and leaf.shape[-2] == S), \
                 f"quadratic residual {leaf.shape}"
+
+
+# --------------------------------------------------------------------------- #
+# decode_pos contract: scalar or (B,), anything else is an error
+# --------------------------------------------------------------------------- #
+from repro.models.layers.attention import cache_write, check_decode_pos  # noqa: E402
+
+
+def test_check_decode_pos_scalar_broadcasts():
+    pos = check_decode_pos(3, 4)
+    np.testing.assert_array_equal(np.asarray(pos), np.full(4, 3))
+    vec = check_decode_pos(jnp.arange(4), 4)
+    np.testing.assert_array_equal(np.asarray(vec), np.arange(4))
+
+
+@pytest.mark.parametrize("bad", [jnp.zeros((4, 1), jnp.int32),
+                                 jnp.zeros((3,), jnp.int32),
+                                 jnp.zeros((1, 4), jnp.int32)])
+def test_check_decode_pos_rejects_wrong_shape(bad):
+    with pytest.raises(ValueError, match="decode_pos"):
+        check_decode_pos(bad, 4)
+
+
+def test_cache_write_rejects_malformed_pos():
+    """A (B, 1) position used to broadcast silently and write KV rows at
+    the wrong ring slots; now it raises."""
+    B, C, Kh, D = 2, 8, 2, 16
+    cache = {"k": jnp.zeros((B, C, Kh, D)), "v": jnp.zeros((B, C, Kh, D)),
+             "kpos": jnp.full((B, C), -1, jnp.int32)}
+    k_new = jnp.ones((B, 1, Kh, D))
+    with pytest.raises(ValueError, match="decode_pos"):
+        cache_write(cache, k_new, k_new, jnp.zeros((B, 1), jnp.int32))
+    # the two legal forms still work
+    out = cache_write(cache, k_new, k_new, 5)
+    np.testing.assert_array_equal(np.asarray(out["kpos"][:, 5]), [5, 5])
+    out = cache_write(cache, k_new, k_new, jnp.asarray([0, 3]))
+    np.testing.assert_array_equal(np.asarray(out["kpos"][0, 0]), 0)
+    np.testing.assert_array_equal(np.asarray(out["kpos"][1, 3]), 3)

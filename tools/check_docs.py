@@ -40,6 +40,7 @@ REQUIRED = [
     "docs/data.md",
     "docs/serving.md",
     "docs/fleet.md",
+    "docs/kernels.md",
     "benchmarks/README.md",
 ]
 
@@ -58,6 +59,7 @@ DOCTEST_MODULES = [
     "repro.serve.engine",
     "repro.serve.backend",
     "repro.serve.steps",
+    "repro.kernels.blocking",
 ]
 
 # [text](target) — excluding images; target split from an optional title
